@@ -1,0 +1,73 @@
+"""Shared benchmark plumbing: tiny-but-real MoE LM trained on the synthetic
+Zipfian stream, plus the paper's analytic communication model (Eq. 6/7)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import (ATTN, DENSE, MOE, LSHConfig, ModelConfig,
+                                MoEConfig, OptimizerConfig)
+from repro.data.synthetic import SyntheticLMDataset
+from repro.runtime.step import init_train_state, make_train_step
+
+
+def bench_mesh() -> Mesh:
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(devs, ("data", "model"))
+
+
+def tiny_moe_config(*, lsh: bool = True, num_hashes: int = 6,
+                    rate: float = 0.2, hash_type: str = "cross_polytope",
+                    compensation: bool = True) -> ModelConfig:
+    """RoBERTa-MoE-shaped (scaled down): alternating dense/MoE FFN layers,
+    16 experts — the paper's §4.2 substitution pattern."""
+    return ModelConfig(
+        name="bench-roberta-moe", family="moe", d_model=64, num_heads=4,
+        num_kv_heads=4, d_ff=128, vocab_size=512,
+        layout=((ATTN, DENSE), (ATTN, MOE)), num_super_blocks=2,
+        mlp_act="gelu",
+        moe=MoEConfig(num_experts=8, top_k=2, expert_ffn_dim=128,
+                      capacity_factor=2.0,
+                      lsh=LSHConfig(enabled=lsh, num_hashes=num_hashes,
+                                    rotation_dim=32,
+                                    compression_rate=rate,
+                                    hash_type=hash_type,
+                                    error_compensation=compensation)),
+        remat_policy="dots", q_chunk=32, kv_chunk=32)
+
+
+def train_curve(cfg: ModelConfig, steps: int, *, seed: int = 0,
+                batch: int = 8, seq: int = 64,
+                use_lsh: Optional[bool] = None) -> Dict:
+    """Train on the synthetic stream; returns losses + wall time."""
+    mesh = bench_mesh()
+    opt = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=steps)
+    ds = SyntheticLMDataset(cfg.vocab_size, seq, batch, seed=seed)
+    losses, t0 = [], time.time()
+    with jax.set_mesh(mesh):
+        state = init_train_state(jax.random.PRNGKey(seed), cfg, opt, mesh)
+        step_fn = jax.jit(make_train_step(cfg, opt, mesh, use_lsh=use_lsh))
+        for s in range(steps):
+            state, m = step_fn(state, ds.batch_at(s))
+            losses.append(float(m["ce"]))
+    return {"losses": losses, "wall_s": time.time() - t0, "state": state,
+            "mesh": mesh}
+
+
+# ---------------------------------------------------------------- Eq. 6/7 --
+
+def paper_comm_ratio(*, flops: float, b_inter: float, k: int, w: int,
+                     h: int) -> float:
+    """Paper Eq. 6: T_a2a / T_compute."""
+    return flops / (6 * b_inter) * (k / (1 + 2 * k)) * ((w - 1) / (w * h))
+
+
+def a2a_share_from_ratio(r: float) -> float:
+    """ratio r = comm/compute  ->  comm share of total = r / (1 + r)."""
+    return r / (1.0 + r)

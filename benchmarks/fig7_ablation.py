@@ -1,0 +1,46 @@
+"""Paper Figure 7 ablations: hash-count sweep {2,4,6,8,10} and hash-type
+sweep (cross-polytope vs spherical) — compression rate + converged loss."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import tiny_moe_config, train_curve
+from repro.core import clustering
+from repro.core.hashing import make_rotations
+
+
+def _measured_rate(num_hashes, hash_type, slots=64):
+    key = jax.random.PRNGKey(0)
+    centers = jax.random.normal(key, (16, 1, 64))
+    toks = (centers + 0.05 * jax.random.normal(
+        jax.random.fold_in(key, 1), (16, 20, 64))).reshape(1, 320, 64)
+    rot = make_rotations(jax.random.fold_in(key, 2), num_hashes, 64, 32,
+                         jnp.float32)
+    comp = clustering.compress(toks, jnp.ones((1, 320), bool), rot, slots,
+                               hash_type)
+    return float(clustering.compression_stats(
+        comp, jnp.ones((1, 320), bool))["effective_rate"])
+
+
+def run(out_rows, steps: int = 40):
+    for L in (2, 4, 6, 8, 10):
+        rate = _measured_rate(L, "cross_polytope")
+        res = train_curve(tiny_moe_config(lsh=True, num_hashes=L), steps)
+        loss = float(np.mean(res["losses"][-8:]))
+        out_rows.append((f"fig7/hashes_{L}", loss * 1e6,
+                         f"loss={loss:.4f},eff_rate={rate:.3f}"))
+    for ht in ("cross_polytope", "spherical"):
+        res = train_curve(tiny_moe_config(lsh=True, hash_type=ht), steps)
+        loss = float(np.mean(res["losses"][-8:]))
+        rate = _measured_rate(6, ht)
+        out_rows.append((f"fig7/type_{ht}", loss * 1e6,
+                         f"loss={loss:.4f},eff_rate={rate:.3f}"))
+    return out_rows
+
+
+if __name__ == "__main__":
+    for r in run([]):
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,99 @@
+"""Render EXPERIMENTS.md tables from artifacts/dryrun.json.
+
+  PYTHONPATH=src python -m benchmarks.report [--section roofline|dryrun]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                   "dryrun.json")
+
+
+def load():
+    with open(ART) as f:
+        return json.load(f)
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(cells):
+    rows = ["| arch | shape | mesh | compile s | args GiB/dev | temp GiB/dev "
+            "| flops/dev | wire GiB/dev | collectives |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for c in sorted(cells, key=lambda c: (c.get("arch", ""),
+                                          c.get("shape", ""),
+                                          c.get("mesh_name", ""))):
+        if "skipped" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh_name']} | "
+                        f"SKIP | — | — | — | — | {c['skipped'][:60]} |")
+            continue
+        if "dominant" not in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh_name']} | "
+                        f"FAIL | — | — | — | — | {c.get('error', '')[:60]} |")
+            continue
+        colls = ",".join(f"{k.split('-')[1] if '-' in k else k}:{v}"
+                         for k, v in sorted(
+                             c.get("collective_counts", {}).items()))
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh_name']} | "
+            f"{c.get('compile_s', 0):.0f} | {fmt_bytes(c['arg_bytes'])} | "
+            f"{fmt_bytes(c['temp_bytes'])} | "
+            f"{c['flops_per_device'] / 1e12:.2f}T | "
+            f"{fmt_bytes(c['wire_bytes_per_device'])} | {colls} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells):
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | MODEL_FLOPs/HLO | roofline frac | next lever |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for c in sorted(cells, key=lambda c: (c.get("arch", ""),
+                                          c.get("shape", ""))):
+        if c.get("mesh_name") != "single" or "dominant" not in c:
+            continue
+        lever = {
+            "compute": "raise MXU utilization (larger effective matmuls, "
+                       "less recompute)",
+            "memory": "cut activation traffic (fusion, bf16 residuals, "
+                      "bigger arithmetic intensity)",
+            "collective": "shrink wire bytes (LSH rate, wire dtype, "
+                          "a2a/grad overlap)",
+        }[c["dominant"]]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_s']:.4f} | "
+            f"{c['memory_s']:.4f} | {c['collective_s']:.4f} | "
+            f"**{c['dominant']}** | {c.get('model_flops_ratio', 0):.2f} | "
+            f"{c.get('roofline_fraction', 0):.3f} | {lever} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(cells):
+    singles = [c for c in cells if c.get("mesh_name") == "single"
+               and "dominant" in c]
+    worst = min(singles, key=lambda c: c.get("roofline_fraction", 1.0))
+    coll = max(singles, key=lambda c: c["collective_s"]
+               / max(1e-12, max(c["compute_s"], c["memory_s"])))
+    return worst, coll
+
+
+if __name__ == "__main__":
+    cells = load()
+    if "--section" in sys.argv:
+        sec = sys.argv[sys.argv.index("--section") + 1]
+    else:
+        sec = "all"
+    if sec in ("dryrun", "all"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table(cells))
+    if sec in ("roofline", "all"):
+        print("\n### Roofline (single-pod 16x16)\n")
+        print(roofline_table(cells))
+        w, c = pick_hillclimb(cells)
+        print(f"\nworst roofline fraction: {w['arch']}/{w['shape']} "
+              f"({w.get('roofline_fraction'):.3f})")
+        print(f"most collective-bound: {c['arch']}/{c['shape']}")

@@ -1,0 +1,33 @@
+"""Eq. 6 / §Roofline: three-term roofline per (arch × shape) from the
+dry-run artifacts (artifacts/dryrun.json).  Emits one row per cell."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def run(out_rows):
+    art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "dryrun.json")
+    if not os.path.exists(art):
+        out_rows.append(("roofline/missing", 0.0,
+                         "run launch.dryrun --all first"))
+        return out_rows
+    with open(art) as f:
+        cells = json.load(f)
+    for c in cells:
+        if "dominant" not in c:
+            continue
+        name = f"roofline/{c['arch']}/{c['shape']}/{c['mesh_name']}"
+        bound = max(c["compute_s"], c["memory_s"], c["collective_s"])
+        out_rows.append(
+            (name, bound * 1e6,
+             f"dom={c['dominant']},comp={c['compute_s']:.4f},"
+             f"mem={c['memory_s']:.4f},coll={c['collective_s']:.4f},"
+             f"roofline_frac={c.get('roofline_fraction', 0):.3f}"))
+    return out_rows
+
+
+if __name__ == "__main__":
+    for r in run([]):
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,37 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Rows are ``name,us_per_call,derived`` CSV.  The second column carries the
+benchmark's primary scalar scaled to integer-microseconds convention
+(value * 1e6); the ``derived`` column holds the human-readable metrics.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    from benchmarks import (fig3_comm_ratio, fig4_token_similarity,
+                            fig6_convergence, fig7_ablation, roofline,
+                            table2_accuracy, table3_throughput)
+    rows = []
+    t0 = time.time()
+    fig3_comm_ratio.run(rows)
+    roofline.run(rows)
+    fig4_token_similarity.run(rows, steps=10 if fast else 30)
+    fig6_convergence.run(rows, steps=20 if fast else 60)
+    table2_accuracy.run(rows, steps=20 if fast else 60)
+    table3_throughput.run(rows, steps=8 if fast else 20)
+    fig7_ablation.run(rows, steps=10 if fast else 40)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(f"# total wall: {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

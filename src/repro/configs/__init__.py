@@ -1,0 +1,5 @@
+from repro.configs.base import (LSHConfig, ModelConfig, MoEConfig,
+                                OptimizerConfig, SHAPES, ShapeSpec,
+                                SSMConfig, TrainConfig, XLSTMConfig,
+                                shape_applicable)
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config

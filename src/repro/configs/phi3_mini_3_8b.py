@@ -1,0 +1,17 @@
+"""phi3-mini-3.8b [dense] — arXiv:2404.14219 (unverified). RoPE SwiGLU GQA.
+32L d_model=3072 32H (GQA kv=32 => MHA) d_ff=8192 vocab=32064."""
+from repro.configs.base import ATTN, DENSE, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-mini-3.8b", family="dense", d_model=3072, num_heads=32,
+        num_kv_heads=32, d_ff=8192, vocab_size=32064,
+        layout=((ATTN, DENSE),), num_super_blocks=32, mlp_act="swiglu",
+        pos_emb="rope", remat_policy="nothing", kv_chunk=2048)
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(d_model=96, num_heads=4, num_kv_heads=4,
+                            d_ff=192, vocab_size=512, num_super_blocks=2,
+                            head_dim=24, remat_policy="dots", kv_chunk=16)

@@ -1,0 +1,32 @@
+"""--arch <id> registry."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+_MODULES = {
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "granite-8b": "repro.configs.granite_8b",
+    "phi3-mini-3.8b": "repro.configs.phi3_mini_3_8b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "whisper-base": "repro.configs.whisper_base",
+}
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch]).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch]).smoke_config()

@@ -1,0 +1,19 @@
+"""smollm-360m [dense] — hf:HuggingFaceTB/SmolLM-135M (hf). llama-arch small.
+32L d_model=960 15H (GQA kv=5) d_ff=2560 vocab=49152.
+15 heads is not divisible by the 16-wide model axis: GSPMD pads the head
+dim (noted in DESIGN.md §4)."""
+from repro.configs.base import ATTN, DENSE, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-360m", family="dense", d_model=960, num_heads=15,
+        num_kv_heads=5, d_ff=2560, vocab_size=49152, head_dim=64,
+        layout=((ATTN, DENSE),), num_super_blocks=32, mlp_act="swiglu",
+        pos_emb="rope", remat_policy="dots", dp_only=True, kv_chunk=2048)
+
+
+def smoke_config() -> ModelConfig:
+    return config().replace(d_model=96, num_heads=3, num_kv_heads=1,
+                            d_ff=192, vocab_size=512, num_super_blocks=2,
+                            head_dim=32, kv_chunk=16)

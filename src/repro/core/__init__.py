@@ -1,0 +1,11 @@
+"""The paper's primary contribution: LSH-compressed MoE all-to-all."""
+from repro.core.hashing import cross_polytope_hash, lsh_hash, make_rotations, spherical_hash
+from repro.core.clustering import Compressed, compress, decompress
+from repro.core.gating import top_k_gating
+from repro.core.lsh_moe import lsh_moe_apply, lsh_moe_init
+
+__all__ = [
+    "cross_polytope_hash", "lsh_hash", "make_rotations", "spherical_hash",
+    "Compressed", "compress", "decompress", "top_k_gating",
+    "lsh_moe_apply", "lsh_moe_init",
+]

@@ -1,0 +1,76 @@
+"""Fixed-slot LSH clustering with residual error compensation (paper §3.2,
+Algorithm 1; TPU static-shape adaptation per DESIGN.md §3).
+
+`compress` clusters each expert's token group into `slots` centroids and
+records per-token residuals; `decompress` reconstructs per-token expert
+outputs via Y = E(centroid) + Δ (Eq. 4/5).  All shapes static:
+
+  tokens [G, C, H]  --compress-->  centroids [G, S, H], residuals, slot ids
+  expert outputs on centroids [G, S, H]  --decompress-->  [G, C, H]
+
+G = expert groups (vectorized), C = per-group capacity, S = slots.
+Centroid accumulation is a one-hot contraction (MXU-friendly; the Pallas
+`segment_centroid` kernel implements the same contract on TPU).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import lsh_hash
+
+
+class Compressed(NamedTuple):
+    centroids: jax.Array      # [G, S, H]  (wire tensor)
+    residuals: jax.Array      # [G, C, H]  (stays local)
+    slots: jax.Array          # [G, C] int32 slot id per token
+    counts: jax.Array         # [G, S] tokens per slot (diagnostic)
+
+
+def assign_slots(tokens: jax.Array, rotations: jax.Array, num_slots: int,
+                 hash_type: str) -> jax.Array:
+    """Bucket ids folded into [0, num_slots)."""
+    ids = lsh_hash(tokens, rotations, hash_type)
+    return jnp.abs(ids) % jnp.int32(num_slots)
+
+
+def compress(tokens: jax.Array, valid: jax.Array, rotations: jax.Array,
+             num_slots: int, hash_type: str = "cross_polytope",
+             error_compensation: bool = True) -> Compressed:
+    """tokens: [G, C, H]; valid: [G, C] bool (occupied buffer slots)."""
+    G, C, H = tokens.shape
+    slots = assign_slots(tokens, rotations, num_slots, hash_type)
+    slots = jnp.where(valid, slots, num_slots)            # invalid -> overflow bin
+    onehot = jax.nn.one_hot(slots, num_slots, dtype=jnp.float32)  # [G,C,S]
+    counts = onehot.sum(axis=1)                           # [G,S]
+    sums = jnp.einsum("gcs,gch->gsh", onehot, tokens.astype(jnp.float32))
+    centroids = (sums / jnp.maximum(counts, 1.0)[..., None]).astype(tokens.dtype)
+    gathered = jnp.einsum("gcs,gsh->gch", onehot, centroids.astype(jnp.float32))
+    if error_compensation:
+        residuals = tokens.astype(jnp.float32) - gathered
+    else:
+        residuals = jnp.zeros_like(gathered)
+    slots = jnp.minimum(slots, num_slots - 1)             # clamp overflow bin
+    return Compressed(centroids, residuals.astype(tokens.dtype), slots, counts)
+
+
+def decompress(expert_out: jax.Array, comp: Compressed) -> jax.Array:
+    """expert_out: [G, S, H] = E(centroids).  Returns [G, C, H] ≈ E(tokens).
+
+    Paper Eq. 5: Y = E(centroid_of(token)) + residual(token)."""
+    gathered = jnp.take_along_axis(
+        expert_out, comp.slots[..., None].astype(jnp.int32), axis=1)
+    return gathered + comp.residuals.astype(expert_out.dtype)
+
+
+def compression_stats(comp: Compressed, valid: jax.Array) -> dict:
+    """Measured wire compression: occupied slots / valid tokens."""
+    occupied = (comp.counts > 0).sum(axis=-1).astype(jnp.float32)  # [G]
+    tokens = jnp.maximum(valid.sum(axis=-1).astype(jnp.float32), 1.0)
+    return {
+        "configured_rate": comp.centroids.shape[1] / max(1, comp.residuals.shape[1]),
+        "occupied_slots": occupied.mean(),
+        "effective_rate": (occupied / tokens).mean(),
+    }

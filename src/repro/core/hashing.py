@@ -1,0 +1,69 @@
+"""Locality-sensitive hashing (paper §2.3, §3.2).
+
+Cross-polytope hashing (Eq. 3):  LSH(x) = argmax_{i∈{±1..±d}} |Rx|_i —
+each of the L independent random rotations maps x to one of 2d cross-polytope
+vertices (index ∈ [0, 2d)).  Spherical(-plane) hashing: sign pattern of L
+random hyperplanes (the paper's ablation baseline, Fig. 7 right).
+
+Multi-hash combination: the L per-hash bucket indices are folded into a
+single bucket id with an iterated affine hash; the fixed-slot clustering
+layer (clustering.py) reduces ids modulo the slot count.  Rotations are
+non-trainable params generated once per layer (stop_gradient'd).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+_FOLD_MULT = 1000003  # large odd multiplier for bucket-id folding
+
+
+def make_rotations(key, num_hashes: int, d_model: int, rotation_dim: int,
+                   dtype=jnp.bfloat16) -> jax.Array:
+    """[L, H, Dr] random rotations (Gaussian — orthogonal in expectation,
+    which is what cross-polytope LSH requires up to scaling)."""
+    r = jax.random.normal(key, (num_hashes, d_model, rotation_dim),
+                          jnp.float32) / jnp.sqrt(d_model)
+    return r.astype(dtype)
+
+
+def cross_polytope_hash(x: jax.Array, rotations: jax.Array) -> jax.Array:
+    """x: [..., H]; rotations: [L, H, Dr].  Returns int32 bucket ids [...].
+
+    Per hash l: rotate, take argmax of |Rx| over Dr, encode the sign in the
+    low bit => vertex index in [0, 2*Dr).  Fold the L indices.
+    """
+    rot = jax.lax.stop_gradient(rotations).astype(jnp.float32)
+    xf = jax.lax.stop_gradient(x).astype(jnp.float32)
+    v = jnp.einsum("...h,lhd->...ld", xf, rot)          # [..., L, Dr]
+    idx = jnp.argmax(jnp.abs(v), axis=-1)               # [..., L]
+    sign = jnp.take_along_axis(v, idx[..., None], axis=-1)[..., 0] < 0
+    vertex = (2 * idx + sign.astype(jnp.int32)).astype(jnp.int32)
+    return _fold(vertex)
+
+
+def spherical_hash(x: jax.Array, rotations: jax.Array) -> jax.Array:
+    """Sign-pattern (hyperplane) hashing; uses column 0 of each rotation."""
+    rot = jax.lax.stop_gradient(rotations).astype(jnp.float32)[..., 0]  # [L,H]
+    xf = jax.lax.stop_gradient(x).astype(jnp.float32)
+    bits = (jnp.einsum("...h,lh->...l", xf, rot) >= 0).astype(jnp.int32)
+    return _fold(bits)
+
+
+def _fold(per_hash_ids: jax.Array) -> jax.Array:
+    """[..., L] int32 -> [...] int32 via iterated affine folding."""
+    L = per_hash_ids.shape[-1]
+    out = jnp.zeros(per_hash_ids.shape[:-1], jnp.int32)
+    for l in range(L):
+        out = out * jnp.int32(_FOLD_MULT) + per_hash_ids[..., l]
+    return out
+
+
+def lsh_hash(x: jax.Array, rotations: jax.Array, hash_type: str) -> jax.Array:
+    if hash_type == "cross_polytope":
+        return cross_polytope_hash(x, rotations)
+    if hash_type == "spherical":
+        return spherical_hash(x, rotations)
+    raise ValueError(f"unknown hash_type {hash_type}")

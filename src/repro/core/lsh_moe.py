@@ -1,0 +1,73 @@
+"""LSH-MoE as a composable module (public API of the paper's contribution).
+
+``lsh_moe_init`` builds the parameter pytree (router, padded expert stack,
+LSH rotations, expert placement permutation); ``lsh_moe_apply`` routes to the
+expert-parallel shard_map path (train / prefill — compression active) or the
+dense-dispatch path (decode).  Toggle the paper's technique per-call with
+``use_lsh`` (the uncompressed baseline is the identical code path minus the
+compress/decompress pair — an apples-to-apples comparison, as in the paper).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import MoEConfig
+from repro.core import moe as moe_lib
+from repro.core.hashing import make_rotations
+from repro.models.layers import expert_mlp_init, fanin_init
+
+
+def lsh_moe_init(key, d_model: int, cfg: MoEConfig, mesh: Mesh, *,
+                 mlp_act: str, dtype) -> Dict:
+    e_pad = moe_lib.padded_num_experts(cfg.num_experts, mesh)
+    ks = jax.random.split(key, 3)
+    p = expert_mlp_init(ks[0], e_pad, d_model, cfg.expert_ffn_dim, mlp_act,
+                        dtype)
+    p["router_w"] = fanin_init(ks[1], (d_model, cfg.num_experts), jnp.float32)
+    p["lsh_rot"] = make_rotations(ks[2], cfg.lsh.num_hashes, d_model,
+                                  min(cfg.lsh.rotation_dim, d_model), dtype)
+    p["placement"] = jnp.arange(cfg.num_experts, dtype=jnp.int32)
+    return p
+
+
+def lsh_moe_apply(params: Dict, x: jax.Array, cfg: MoEConfig, mesh: Mesh, *,
+                  mlp_act: str, mode: str = "train",
+                  use_lsh: Optional[bool] = None) -> Tuple[jax.Array, Dict]:
+    """mode: "train" | "prefill" -> expert-parallel a2a (+LSH);
+    "decode" -> dense dispatch (tiny token counts; no compression)."""
+    if mode == "decode":
+        return moe_lib.moe_dense_dispatch(x, params, cfg, mesh,
+                                          mlp_act=mlp_act)
+    return moe_lib.moe_expert_parallel(x, params, cfg, mesh, mlp_act=mlp_act,
+                                       use_lsh=use_lsh)
+
+
+def apply_placement_update(params: Dict, new_placement: jax.Array,
+                           old_placement: jax.Array) -> Dict:
+    """Hot-expert rebalancing (runtime/fault.py): permute physical expert
+    weights so logical expert e now lives at new_placement[e].  Cheap param
+    permute applied at checkpoint boundaries."""
+    perm = jnp.zeros_like(new_placement)
+    perm = perm.at[new_placement].set(jnp.arange(new_placement.shape[0]))
+    out = dict(params)
+    e = new_placement.shape[0]
+    inv_old = jnp.zeros_like(old_placement).at[old_placement].set(
+        jnp.arange(e))
+    reorder = new_placement[inv_old]  # physical_new per physical_old slot
+    for name in ("w_gate", "w_up", "w_down"):
+        if name in out:
+            w = out[name]
+            out[name] = w.at[reorder[: e]].set(w[jnp.arange(e) % w.shape[0]][: e]) \
+                if False else _permute_rows(w, old_placement, new_placement, e)
+    out["placement"] = new_placement
+    return out
+
+
+def _permute_rows(w, old_placement, new_placement, e):
+    """Move logical expert weights from old physical slots to new ones."""
+    gathered = w[old_placement]           # logical order
+    return w.at[new_placement].set(gathered[:e])

@@ -1,0 +1,210 @@
+"""Mixture-of-Experts layers.
+
+Two dispatch paths:
+
+1. ``moe_expert_parallel`` — the paper's setting (train / prefill): a
+   ``shard_map`` region over the mesh in which tokens are bucketed per
+   expert with static capacity, optionally LSH-compressed (core/clustering),
+   exchanged via ``jax.lax.all_to_all`` over the `model` axis (= expert
+   parallelism), processed by the local experts, exchanged back, and
+   error-compensated.  The *compressed* tensor is the only thing crossing
+   the wire — the collective operand shrinks by the configured rate.
+
+2. ``moe_dense_dispatch`` — decode path: token counts are tiny, so a
+   GSPMD one-hot-contraction dispatch (GShard style) is cheaper than the
+   explicit exchange and needs no shard_map.
+
+Expert weights are stored [E, H, F] sharded P(model, data, -): expert dim
+over `model` (EP), H over `data` (FSDP); the region all-gathers over `data`
+(transpose: psum_scatter of grads => ZeRO-2 gradient sharding for free).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.core import clustering
+from repro.core.gating import positions_in_expert, top_k_gating
+from repro.runtime.sharding import axis_size, dp_axes
+
+
+def padded_num_experts(num_experts: int, mesh: Mesh) -> int:
+    r = axis_size(mesh, "model")
+    return int(math.ceil(num_experts / r) * r)
+
+
+def expert_capacity(tokens_per_device: int, num_experts_padded: int,
+                    top_k: int, capacity_factor: float) -> int:
+    cap = int(math.ceil(tokens_per_device * top_k / num_experts_padded
+                        * capacity_factor))
+    return max(8, int(math.ceil(cap / 8) * 8))
+
+
+def num_lsh_slots(capacity: int, rate: float) -> int:
+    return max(8, int(math.ceil(capacity * rate / 8) * 8))
+
+
+# --------------------------------------------------------------------------
+# Path 1: expert-parallel shard_map (train / prefill) — the paper's setting.
+# --------------------------------------------------------------------------
+
+def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
+               cfg: MoEConfig, mesh: Mesh, mlp_act: str, e_pad: int,
+               capacity: int, use_lsh: bool, wire_dtype):
+    """Per-device body. x: [B_loc, S_loc, H]."""
+    model_r = axis_size(mesh, "model")
+    e_local = e_pad // model_r
+    B_loc, S_loc, H = x.shape
+    T = B_loc * S_loc
+    xf = x.reshape(T, H)
+
+    gate = top_k_gating(xf, router_w, cfg.top_k, placement)
+    k = cfg.top_k
+    e_flat = gate.expert_ids.reshape(T * k)
+    pos, keep = positions_in_expert(e_flat, e_pad, capacity)
+
+    # dispatch buffer [E_pad, C, H] (+ occupancy) via capped scatter-add
+    src = jnp.repeat(xf, k, axis=0) * keep[:, None].astype(xf.dtype)
+    disp = jnp.zeros((e_pad, capacity, H), xf.dtype)
+    disp = disp.at[e_flat, pos].add(src, mode="drop")
+    occ = jnp.zeros((e_pad, capacity), jnp.float32)
+    occ = occ.at[e_flat, pos].add(keep.astype(jnp.float32), mode="drop")
+    valid = occ > 0
+
+    if use_lsh:
+        slots = num_lsh_slots(capacity, cfg.lsh.compression_rate)
+        comp = clustering.compress(disp, valid, rot, slots,
+                                   cfg.lsh.hash_type,
+                                   cfg.lsh.error_compensation)
+        wire, c_wire = comp.centroids, slots
+    else:
+        comp, wire, c_wire = None, disp, capacity
+
+    # ---- all-to-all #1 (the compressed tensor is what crosses the wire) --
+    from repro.runtime.bfcoll import all_gather_bf16, all_to_all_bf16
+    data_r = axis_size(mesh, "data")
+    wire = wire.astype(wire_dtype)
+    send = wire.reshape(model_r, e_local, c_wire, H)
+    recv = all_to_all_bf16(send, "model", 0, 0)           # [R, e_local, c', H]
+    # expert weights: FSDP all-gather over `data` (H axis)
+    wg = None if w_gate is None else all_gather_bf16(w_gate, "data", 1, data_r)
+    wu = all_gather_bf16(w_up, "data", 1, data_r)
+    wd = all_gather_bf16(w_down, "data", 1, data_r)
+
+    tok = recv.transpose(1, 0, 2, 3).reshape(e_local, model_r * c_wire, H)
+    tok = tok.astype(x.dtype)
+    h = jnp.einsum("eth,ehf->etf", tok, wu)
+    if mlp_act == "swiglu":
+        g = jnp.einsum("eth,ehf->etf", tok, wg)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    elif mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("etf,efh->eth", h, wd)
+
+    # ---- all-to-all #2 (results return compressed) -----------------------
+    back = out.reshape(e_local, model_r, c_wire, H).transpose(1, 0, 2, 3)
+    back = back.astype(wire_dtype)
+    ret = all_to_all_bf16(back, "model", 0, 0)
+    expert_out = ret.reshape(e_pad, c_wire, H).astype(jnp.float32)
+
+    if use_lsh:
+        out_tok = clustering.decompress(expert_out, comp)  # [E_pad, C, H]
+    else:
+        out_tok = expert_out
+
+    # combine: gather own (expert, pos) results, weight, sum over k
+    flat = out_tok[e_flat, jnp.minimum(pos, capacity - 1)]
+    flat = flat * (keep[:, None] & True).astype(flat.dtype)
+    y = (flat.reshape(T, k, H) * gate.weights[..., None]).sum(axis=1)
+
+    all_axes = tuple(mesh.axis_names)
+    aux = jax.lax.pmean(gate.aux_loss, all_axes)
+    z = jax.lax.pmean(gate.z_loss, all_axes)
+    load = jax.lax.psum(jnp.pad(gate.load, (0, e_pad - gate.load.shape[0])),
+                        all_axes)
+    return y.reshape(B_loc, S_loc, H).astype(x.dtype), aux, z, load
+
+
+def moe_expert_parallel(x: jax.Array, params: Dict, cfg: MoEConfig,
+                        mesh: Mesh, *, mlp_act: str,
+                        use_lsh: Optional[bool] = None
+                        ) -> Tuple[jax.Array, Dict]:
+    """x: [B, S, H] sharded (batch->(pod,data), seq->model).
+
+    params: router_w [H,E], w_gate/w_up [E_pad,H,F], w_down [E_pad,F,H],
+    lsh_rot [L,H,Dr], placement [E].
+    """
+    B, S, H = x.shape
+    dp = dp_axes(mesh)
+    n_dp = max(1, math.prod(axis_size(mesh, a) for a in dp))
+    model_r = axis_size(mesh, "model")
+    e_pad = params["w_up"].shape[0]
+    t_loc = (B // n_dp) * (S // model_r)
+    capacity = expert_capacity(t_loc, e_pad, cfg.top_k, cfg.capacity_factor)
+    use_lsh = cfg.lsh.enabled if use_lsh is None else use_lsh
+    wire_dtype = jnp.dtype(cfg.lsh.wire_dtype) if use_lsh else x.dtype
+
+    tok_spec = P(dp if len(dp) > 1 else (dp[0] if dp else None), "model", None)
+    ew_spec = P("model", "data", None)
+    rep = P(None)
+
+    fn = partial(_local_moe, cfg=cfg, mesh=mesh, mlp_act=mlp_act,
+                 e_pad=e_pad, capacity=capacity, use_lsh=use_lsh,
+                 wire_dtype=wire_dtype)
+    y, aux, z, load = shard_map(
+        fn, mesh=mesh,
+        in_specs=(tok_spec, P(None, None),
+                  ew_spec if "w_gate" in params else None,
+                  ew_spec, ew_spec, P(None, None, None), rep),
+        out_specs=(tok_spec, P(), P(), P()),
+        check_vma=False,
+    )(x, params["router_w"], params.get("w_gate"), params["w_up"],
+      params["w_down"], params["lsh_rot"], params["placement"])
+    return y, {"aux_loss": aux, "z_loss": z, "expert_load": load}
+
+
+# --------------------------------------------------------------------------
+# Path 2: dense one-hot dispatch (decode) — GSPMD partitions everything.
+# --------------------------------------------------------------------------
+
+def moe_dense_dispatch(x: jax.Array, params: Dict, cfg: MoEConfig,
+                       mesh: Mesh, *, mlp_act: str) -> Tuple[jax.Array, Dict]:
+    """x: [B, S, H] with tiny B*S (decode).  Pure einsum dispatch."""
+    B, S, H = x.shape
+    T = B * S
+    xf = x.reshape(T, H)
+    e_pad = params["w_up"].shape[0]
+    gate = top_k_gating(xf, params["router_w"], cfg.top_k, params["placement"])
+    k = cfg.top_k
+    cap = max(4, int(math.ceil(T * k / e_pad * 2)))
+    e_flat = gate.expert_ids.reshape(T * k)
+    pos, keep = positions_in_expert(e_flat, e_pad, cap)
+    onehot = (jax.nn.one_hot(e_flat, e_pad, dtype=jnp.float32)[:, :, None]
+              * jax.nn.one_hot(pos, cap, dtype=jnp.float32)[:, None, :]
+              * keep[:, None, None])                      # [F, E, C]
+    xr = jnp.repeat(xf.astype(jnp.float32), k, axis=0)    # [F, H]
+    disp = jnp.einsum("fec,fh->ech", onehot, xr)
+    disp = disp.astype(x.dtype)
+    h = jnp.einsum("eth,ehf->etf", disp, params["w_up"])
+    if mlp_act == "swiglu":
+        g = jnp.einsum("eth,ehf->etf", disp, params["w_gate"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    elif mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    eo = jnp.einsum("etf,efh->eth", h, params["w_down"])
+    flat = jnp.einsum("fec,ech->fh", onehot, eo.astype(jnp.float32))
+    y = (flat.reshape(T, k, H) * gate.weights[..., None]).sum(axis=1)
+    return (y.reshape(B, S, H).astype(x.dtype),
+            {"aux_loss": gate.aux_loss, "z_loss": gate.z_loss,
+             "expert_load": jnp.pad(gate.load, (0, e_pad - gate.load.shape[0]))})

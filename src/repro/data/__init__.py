@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticLMDataset
+from repro.data.pipeline import PrefetchIterator

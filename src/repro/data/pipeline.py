@@ -1,0 +1,51 @@
+"""Host-side input pipeline: background prefetch + device placement."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+
+
+class PrefetchIterator:
+    """Wraps a host iterator with a daemon prefetch thread (depth-bounded)
+    and optional device put (sharding-aware)."""
+
+    def __init__(self, it: Iterator, depth: int = 2,
+                 place: Optional[Callable] = None):
+        self._it = it
+        self._place = place
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err = None
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            for item in self._it:
+                if self._stop.is_set():
+                    return
+                if self._place is not None:
+                    item = self._place(item)
+                self._q.put(item)
+        except Exception as e:  # surfaced on next()
+            self._err = e
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None and self._err is not None:
+            raise self._err
+        return item
+
+    def close(self):
+        self._stop.set()
+
+
+def device_put_batch(batch, shardings):
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), batch, shardings)

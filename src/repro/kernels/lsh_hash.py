@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: fused cross-polytope LSH hashing.
+
+Computes per-(token, hash) cross-polytope vertex ids:
+  v      = x @ R_l                     (MXU matmul, [tile_t, Dr])
+  idx    = argmax |v|                  (VREG reduction)
+  vertex = 2*idx + (v[idx] < 0)
+
+fused so the rotated activations (L × [T, Dr]) never round-trip to HBM —
+on the GPU reference implementation this is a GEMM + separate argmax kernel.
+
+Grid: (T/tile_t, L).  BlockSpecs keep one x tile (tile_t × H) and one
+rotation (H × Dr) in VMEM; both are multiple-of-128 padded by the caller.
+VMEM footprint: tile_t*H*4 + H*Dr*4 + tile_t*Dr*4 bytes
+(128*8192*4 = 4 MiB + 8192*64*4 = 2 MiB for the largest config — fits the
+16 MiB VMEM budget with double buffering).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, rot_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)            # [tile_t, H]
+    r = rot_ref[0].astype(jnp.float32)            # [H, Dr]
+    v = jnp.dot(x, r, preferred_element_type=jnp.float32)  # [tile_t, Dr]
+    av = jnp.abs(v)
+    idx = jnp.argmax(av, axis=-1).astype(jnp.int32)        # [tile_t]
+    best = jnp.max(av, axis=-1)
+    sign = jnp.sum(jnp.where(av == best[:, None], v, 0.0), axis=-1) < 0
+    out_ref[:, 0] = 2 * idx + sign.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_t", "interpret"))
+def lsh_hash_pallas(x: jax.Array, rotations: jax.Array, *, tile_t: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """x: [T, H]; rotations: [L, H, Dr] -> per-hash vertex ids [T, L] int32.
+
+    interpret=True executes the kernel body on CPU (validation); on TPU pass
+    interpret=False for the compiled Mosaic kernel.
+    """
+    T, H = x.shape
+    L, _, Dr = rotations.shape
+    pad_t = (-T) % tile_t
+    if pad_t:
+        x = jnp.pad(x, ((0, pad_t), (0, 0)))
+    Tp = T + pad_t
+    out = pl.pallas_call(
+        _kernel,
+        grid=(Tp // tile_t, L),
+        in_specs=[
+            pl.BlockSpec((tile_t, H), lambda t, l: (t, 0)),
+            pl.BlockSpec((1, H, Dr), lambda t, l: (l, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_t, 1), lambda t, l: (t, l)),
+        out_shape=jax.ShapeDtypeStruct((Tp, L), jnp.int32),
+        interpret=interpret,
+    )(x, rotations)
+    return out[:T]

@@ -1,0 +1,38 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``use_pallas`` selects the kernel (interpret on CPU, Mosaic on TPU) vs the
+pure-jnp reference.  The model code routes through these so the TPU build
+flips one flag.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.lsh_hash import lsh_hash_pallas
+from repro.kernels.residual_apply import residual_apply_pallas
+from repro.kernels.segment_centroid import segment_centroid_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def lsh_hash(x, rotations, *, use_pallas: bool = False):
+    if use_pallas:
+        return lsh_hash_pallas(x, rotations, interpret=not _on_tpu())
+    return ref.lsh_hash_ref(x, rotations)
+
+
+def segment_centroid(slots, x, num_slots: int, *, use_pallas: bool = False):
+    if use_pallas:
+        return segment_centroid_pallas(slots, x, num_slots=num_slots,
+                                       interpret=not _on_tpu())
+    return ref.segment_centroid_ref(slots, x, num_slots)
+
+
+def residual_apply(slots, expert_out, residual, *, use_pallas: bool = False):
+    if use_pallas:
+        return residual_apply_pallas(slots, expert_out, residual,
+                                     interpret=not _on_tpu())
+    return ref.residual_apply_ref(slots, expert_out, residual)

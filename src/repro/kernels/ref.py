@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose-tested in
+tests/test_kernels.py across shape/dtype sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lsh_hash_ref(x: jax.Array, rotations: jax.Array) -> jax.Array:
+    """x: [T, H]; rotations: [L, H, Dr] -> [T, L] int32 vertex ids."""
+    v = jnp.einsum("th,lhd->tld", x.astype(jnp.float32),
+                   rotations.astype(jnp.float32))
+    idx = jnp.argmax(jnp.abs(v), axis=-1).astype(jnp.int32)
+    sign = jnp.take_along_axis(v, idx[..., None], axis=-1)[..., 0] < 0
+    return 2 * idx + sign.astype(jnp.int32)
+
+
+def segment_centroid_ref(slots: jax.Array, x: jax.Array, num_slots: int):
+    """slots: [G, C]; x: [G, C, H] -> (centroids [G,S,H] f32, counts [G,S])."""
+    onehot = (slots[..., None] ==
+              jnp.arange(num_slots)[None, None, :]).astype(jnp.float32)
+    counts = onehot.sum(axis=1)
+    sums = jnp.einsum("gcs,gch->gsh", onehot, x.astype(jnp.float32))
+    return sums / jnp.maximum(counts, 1.0)[..., None], counts
+
+
+def residual_apply_ref(slots: jax.Array, expert_out: jax.Array,
+                       residual: jax.Array) -> jax.Array:
+    """[G,C] ids, [G,S,H] outputs, [G,C,H] residuals -> [G,C,H] f32."""
+    gathered = jnp.take_along_axis(
+        expert_out.astype(jnp.float32),
+        slots[..., None].astype(jnp.int32), axis=1)
+    return gathered + residual.astype(jnp.float32)

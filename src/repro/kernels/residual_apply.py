@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused residual error-compensation gather.
+
+Y[g, c] = E(centroids)[g, slot[g, c]] + residual[g, c]      (paper Eq. 5)
+
+A gather along the slot axis fused with the add, so the reconstructed
+tensor is produced in one pass over HBM (the gather operand — the expert
+outputs on centroids — stays VMEM-resident per group).
+
+Grid: (G, C/tile_t).  VMEM: expert_out block (S×H), residual tile, out tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(slots_ref, eout_ref, resid_ref, out_ref, *, num_slots):
+    slots = slots_ref[0]                          # [tile_t]
+    eout = eout_ref[0].astype(jnp.float32)        # [S, H]
+    resid = resid_ref[0].astype(jnp.float32)      # [tile_t, H]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32,
+                                       (slots.shape[0], num_slots), 1)
+              == slots[:, None]).astype(jnp.float32)
+    gathered = jnp.dot(onehot, eout, preferred_element_type=jnp.float32)
+    out_ref[0] = (gathered + resid).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_t", "interpret"))
+def residual_apply_pallas(slots: jax.Array, expert_out: jax.Array,
+                          residual: jax.Array, *, tile_t: int = 128,
+                          interpret: bool = True) -> jax.Array:
+    """slots: [G, C] int32; expert_out: [G, S, H]; residual: [G, C, H].
+    Returns [G, C, H] = expert_out[g, slots] + residual (f32)."""
+    G, C, H = residual.shape
+    S = expert_out.shape[1]
+    pad_c = (-C) % tile_t
+    if pad_c:
+        residual = jnp.pad(residual, ((0, 0), (0, pad_c), (0, 0)))
+        slots = jnp.pad(slots, ((0, 0), (0, pad_c)))
+    Cp = C + pad_c
+    out = pl.pallas_call(
+        functools.partial(_kernel, num_slots=S),
+        grid=(G, Cp // tile_t),
+        in_specs=[
+            pl.BlockSpec((1, tile_t), lambda g, t: (g, t)),
+            pl.BlockSpec((1, S, H), lambda g, t: (g, 0, 0)),
+            pl.BlockSpec((1, tile_t, H), lambda g, t: (g, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_t, H), lambda g, t: (g, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, Cp, H), jnp.float32),
+        interpret=interpret,
+    )(slots, expert_out, residual)
+    return out[:, :C]

@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+extract roofline terms from the compiled SPMD artifact.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-moe-30b-a3b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out artifacts/dryrun
+
+The XLA_FLAGS line above MUST precede any jax import: jax locks the device
+count on first init.  Smoke tests / benches never import this module, so
+they see 1 device.
+"""
+import argparse
+import gc
+import json
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (OptimizerConfig, SHAPES, active_param_count,
+                                param_count, shape_applicable)
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_lib
+from repro.optim.adam import OptState
+from repro.runtime import params as prules
+from repro.runtime.sharding import dp_axes
+from repro.runtime.step import TrainState, init_train_state, make_train_step
+
+
+def _batch_structs(cfg, shape):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    batch = {}
+    S_tok = S - (cfg.num_patches if cfg.frontend == "patch_stub" else 0)
+    batch["tokens"] = jax.ShapeDtypeStruct((B, S_tok), i32)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S_tok), i32)
+    if cfg.frontend == "patch_stub":
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), bf16)
+    if cfg.encoder_decoder:
+        batch["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), bf16)
+    return batch
+
+
+def input_specs(arch: str, shape_name: str):
+    """Public helper: (cfg, batch ShapeDtypeStructs)."""
+    cfg = get_config(arch)
+    return cfg, _batch_structs(cfg, SHAPES[shape_name])
+
+
+def _batch_shardings(cfg, shape, mesh):
+    spec = prules.batch_specs(cfg, shape, mesh)
+    structs = _batch_structs(cfg, shape)
+    return {k: NamedSharding(mesh, prules._divisible(
+        spec.get(k, P()), structs[k].shape, mesh)) for k in structs}
+
+
+def _opt_cfg(cfg) -> OptimizerConfig:
+    big = param_count(cfg) > 2e10
+    return OptimizerConfig(moment_dtype="int8" if big else "float32")
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, use_lsh=None,
+               compile_it: bool = True, cfg_override=None):
+    """Lower (and compile) one cell; returns (artifact dict, compiled)."""
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}, None
+    from repro.runtime.sharding import parallelism_profile
+    with parallelism_profile(cfg.dp_only):
+        return _lower_cell_inner(arch, shape_name, mesh, cfg, shape,
+                                 use_lsh=use_lsh, compile_it=compile_it)
+
+
+def _lower_cell_inner(arch, shape_name, mesh, cfg, shape, *, use_lsh,
+                      compile_it):
+    opt_cfg = _opt_cfg(cfg)
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+    if shape.kind == "train":
+        state_shapes = jax.eval_shape(
+            partial(init_train_state, cfg=cfg, opt_cfg=opt_cfg, mesh=mesh), key)
+        p_specs = prules.param_specs(state_shapes.params, mesh)
+        m_specs = prules.moment_specs(state_shapes.params, mesh,
+                                      opt_cfg.moment_dtype)
+        state_sh = TrainState(
+            jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs),
+            OptState(NamedSharding(mesh, P()),
+                     jax.tree.map(lambda s: NamedSharding(mesh, s), m_specs,
+                                  is_leaf=lambda x: isinstance(x, P)),
+                     jax.tree.map(lambda s: NamedSharding(mesh, s), m_specs,
+                                  is_leaf=lambda x: isinstance(x, P)),
+                     NamedSharding(mesh, P())))
+        batch_sh = _batch_shardings(cfg, shape, mesh)
+        step_fn = make_train_step(cfg, opt_cfg, mesh, use_lsh=use_lsh,
+                                  microbatch=cfg.train_microbatch)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                              donate_argnums=(0,)).lower(
+                state_shapes, _batch_structs(cfg, shape))
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * active_param_count(cfg) * tokens
+    elif shape.kind == "prefill":
+        params_shapes = jax.eval_shape(
+            partial(model_lib.init_params, cfg=cfg, mesh=mesh), key)
+        p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            prules.param_specs(params_shapes, mesh))
+        batch_sh = _batch_shardings(cfg, shape, mesh)
+        fn = lambda p, b: model_lib.prefill(p, cfg, mesh, b)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(fn, in_shardings=(p_sh, batch_sh)).lower(
+                params_shapes, _batch_structs(cfg, shape))
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * active_param_count(cfg) * tokens
+    else:  # decode
+        params_shapes = jax.eval_shape(
+            partial(model_lib.init_params, cfg=cfg, mesh=mesh), key)
+        p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            prules.param_specs(params_shapes, mesh))
+        state_shapes = jax.eval_shape(
+            partial(model_lib.init_decode_state, cfg, shape.global_batch,
+                    shape.seq_len, mesh))
+        st_specs = prules.decode_state_specs(cfg, shape.global_batch, mesh,
+                                             max_len=shape.seq_len)
+        st_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), st_specs,
+                             is_leaf=lambda x: isinstance(x, P))
+        tok_sh = _batch_shardings(cfg, shape, mesh)["tokens"]
+        fn = lambda p, s, t: model_lib.decode_step(p, cfg, mesh, s, t)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(fn, in_shardings=(p_sh, st_sh, tok_sh),
+                              donate_argnums=(1,)).lower(
+                params_shapes, state_shapes,
+                _batch_structs(cfg, shape)["tokens"])
+        tokens = shape.global_batch
+        model_flops = 2.0 * active_param_count(cfg) * tokens
+    lower_s = time.time() - t0
+    art = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(str(s) for s in mesh.devices.shape),
+           "n_devices": mesh.devices.size,
+           "params": param_count(cfg),
+           "active_params": active_param_count(cfg),
+           "model_flops_global": model_flops,
+           "use_lsh": use_lsh if use_lsh is not None
+           else (cfg.moe.lsh.enabled and cfg.has_moe()),
+           "lower_s": round(lower_s, 2)}
+    if not compile_it:
+        return art, lowered
+    t0 = time.time()
+    compiled = lowered.compile()
+    art["compile_s"] = round(time.time() - t0, 2)
+    roof = hlo_analysis.analyze(compiled)
+    art.update(roof.to_dict())
+    n = mesh.devices.size
+    art["hlo_flops_global"] = roof.flops_per_device * n
+    art["model_flops_ratio"] = (model_flops / art["hlo_flops_global"]
+                                if art["hlo_flops_global"] else 0.0)
+    # roofline fraction: useful-model-time / achievable bound
+    art["roofline_fraction"] = ((model_flops / n / hlo_analysis.PEAK_FLOPS)
+                                / roof.bound_s if roof.bound_s else 0.0)
+    return art, compiled
+
+
+def run_cells(arch_list, shape_list, meshes, *, use_lsh=None, out=None,
+              verbose=True):
+    results = []
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        for arch in arch_list:
+            for shape_name in shape_list:
+                tag = f"{arch}/{shape_name}/{mesh_name}"
+                try:
+                    art, compiled = lower_cell(arch, shape_name, mesh,
+                                               use_lsh=use_lsh)
+                    if "skipped" in art:
+                        if verbose:
+                            print(f"SKIP {tag}: {art['skipped']}", flush=True)
+                    else:
+                        if verbose:
+                            print(f"OK   {tag}: compile={art['compile_s']}s "
+                                  f"dom={art['dominant']} "
+                                  f"comp={art['compute_s']:.4f}s "
+                                  f"mem={art['memory_s']:.4f}s "
+                                  f"coll={art['collective_s']:.4f}s "
+                                  f"args/dev={art['arg_bytes']/2**30:.2f}GiB "
+                                  f"temp/dev={art['temp_bytes']/2**30:.2f}GiB",
+                                  flush=True)
+                    del compiled
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    art = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "error": f"{type(e).__name__}: {e}"}
+                    print(f"FAIL {tag}: {art['error'][:300]}", flush=True)
+                art["mesh_name"] = mesh_name
+                results.append(art)
+                gc.collect()
+                if out:
+                    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+                    with open(out, "w") as f:
+                        json.dump(results, f, indent=1)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--lsh", default=None, choices=("on", "off"))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    use_lsh = None if args.lsh is None else (args.lsh == "on")
+    archs = list(ARCH_IDS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    results = run_cells(archs, shapes, meshes, use_lsh=use_lsh, out=args.out)
+    n_ok = sum(1 for r in results if "dominant" in r)
+    n_skip = sum(1 for r in results if "skipped" in r)
+    n_fail = sum(1 for r in results if "error" in r)
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skipped, {n_fail} failed ==")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,297 @@
+"""Loop-aware structural analysis of compiled (post-SPMD) HLO text.
+
+XLA's ``cost_analysis()`` counts each ``while`` body ONCE, so any
+scan-over-layers program is undercounted by ~num_layers×.  This module
+parses the compiled module text into computations, extracts per-computation
+FLOPs (dot/convolution from operand shapes, ~1 flop/elem for elementwise),
+HBM bytes (operands+results of non-fused instructions, fusions counted at
+the fusion boundary — XLA's own model), and collective wire bytes (ring
+formulas), then multiplies each computation by its execution count derived
+from ``while`` ops' ``known_trip_count`` backend configs, walking from
+ENTRY.
+
+This is the source of truth for the §Roofline terms.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s+(%[\w.\-]+) = (.+?) ([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY )?(%[\w.\-]+)[\w ]*\(.*\) -> .+ \{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "power", "exponential", "log",
+    "tanh", "negate", "maximum", "minimum", "abs", "rsqrt", "sqrt",
+    "logistic", "cosine", "sine", "select", "compare", "and", "or", "xor",
+    "floor", "ceil", "round-nearest-afz", "remainder", "clamp",
+    "exponential-minus-one", "log-plus-one", "sign", "not",
+}
+COLLECTIVES = ("all-to-all", "all-gather", "all-reduce", "reduce-scatter",
+               "collective-permute")
+
+
+def _shape_elems(text: str) -> Tuple[int, int]:
+    """(elements, bytes) of the FIRST array shape in `text`."""
+    m = _SHAPE_RE.search(text)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return 0, 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n, n * _DTYPE_BYTES[m.group(1)]
+
+
+def _all_shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type str
+    is_fusion: bool = False
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            cur = Computation(mc.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            ins = Instr(mi.group(1), mi.group(2), mi.group(3), mi.group(4))
+            cur.instrs.append(ins)
+            cur.symbols[ins.name] = ins.result_type
+        else:
+            # parameter lines: "  %p = f32[..] parameter(0)" match above;
+            # ROOT lines also match. Others (e.g. constants spanning) skip.
+            pass
+    # mark fusion computations (referenced via calls= from fusion ops)
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                m = _CALLS_RE.search(ins.rest)
+                if m and m.group(1) in comps:
+                    comps[m.group(1)].is_fusion = True
+    return comps, entry
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_elems, _ = _shape_elems(ins.result_type)
+    # contracting size: product of lhs contracting dims
+    ops = _OPERAND_RE.findall(ins.rest)
+    if not ops:
+        return 0.0
+    lhs_type = comp.symbols.get(ops[0], "")
+    m = _SHAPE_RE.search(lhs_type)
+    if not m:
+        return 0.0
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+    k = 1
+    if mc:
+        for idx in mc.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                k *= dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(comp: Computation, ins: Instr) -> float:
+    out_elems, _ = _shape_elems(ins.result_type)
+    ops = _OPERAND_RE.findall(ins.rest)
+    if len(ops) < 2:
+        return 0.0
+    m = _SHAPE_RE.search(comp.symbols.get(ops[1], ""))
+    if not m:
+        return 0.0
+    kernel_elems = 1
+    for d in m.group(2).split(","):
+        if d:
+            kernel_elems *= int(d)
+    return 2.0 * out_elems * kernel_elems  # upper bound-ish
+
+
+def _collective_wire(ins: Instr) -> Tuple[str, float, int]:
+    op = ins.op.replace("-start", "")
+    if ins.result_type.startswith("("):
+        b = _all_shapes_bytes(ins.result_type) // 2
+    else:
+        b = _all_shapes_bytes(ins.result_type)
+    g = 1
+    m = _GROUPS_RE.search(ins.rest)
+    if m:
+        g = int(m.group(2))
+    else:
+        m2 = _GROUPS_BRACE_RE.search(ins.rest)
+        if m2:
+            g = len(m2.group(1).split(","))
+    if g <= 1:
+        wire = 0.0
+    elif op == "all-gather":
+        wire = b * (g - 1) / g
+    elif op == "reduce-scatter":
+        wire = b * (g - 1)
+    elif op == "all-reduce":
+        wire = 2 * b * (g - 1) / g
+    elif op == "all-to-all":
+        wire = b * (g - 1) / g
+    else:
+        wire = float(b)
+    return op, wire, b
+
+
+@dataclass
+class StructuralCosts:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    wire_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_wire(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def analyze_text(text: str) -> StructuralCosts:
+    comps, entry = parse_module(text)
+    # execution multipliers: ENTRY = 1; while bodies/conditions x trip count
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # iterate to fixpoint over the call graph (while bodies may nest)
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            if ins.op == "while":
+                trips = 1
+                mt = _TRIP_RE.search(ins.rest)
+                if mt:
+                    trips = int(mt.group(1))
+                mb = _BODY_RE.search(ins.rest)
+                cond = re.search(r"condition=(%[\w.\-]+)", ins.rest)
+                for target, n in ((mb, trips), (cond, trips + 1)):
+                    if target:
+                        tn = target.group(1)
+                        mult[tn] += mult[cname] * n
+                        if tn not in seen:
+                            seen.add(tn)
+                            order.append(tn)
+            elif ins.op in ("call", "conditional", "fusion"):
+                for m in re.finditer(
+                        r"(?:to_apply|calls|branch_computations=\{)"
+                        r"(%[\w.\-]+)", ins.rest):
+                    tn = m.group(1)
+                    mult[tn] += mult[cname]
+                    if tn not in seen:
+                        seen.add(tn)
+                        order.append(tn)
+
+    costs = StructuralCosts()
+    for cname, comp in comps.items():
+        w = mult.get(cname, 0.0)
+        if w <= 0:
+            continue
+        for ins in comp.instrs:
+            op = ins.op
+            if comp.is_fusion:
+                # only count dot/conv flops inside fusions (bytes counted
+                # at the boundary); elementwise inside fusion ~ result size
+                if op == "dot":
+                    costs.flops += w * _dot_flops(comp, ins)
+                elif op == "convolution":
+                    costs.flops += w * _conv_flops(comp, ins)
+                elif op in _ELEMWISE:
+                    costs.flops += w * _shape_elems(ins.result_type)[0]
+                continue
+            if op == "dot":
+                costs.flops += w * _dot_flops(comp, ins)
+            elif op == "convolution":
+                costs.flops += w * _conv_flops(comp, ins)
+            elif op in _ELEMWISE:
+                costs.flops += w * _shape_elems(ins.result_type)[0]
+            if op.replace("-start", "") in COLLECTIVES:
+                kind, wire, b = _collective_wire(ins)
+                costs.wire_bytes[kind] = costs.wire_bytes.get(kind, 0.0) \
+                    + w * wire
+                costs.collective_counts[kind] = \
+                    costs.collective_counts.get(kind, 0.0) + w
+            # HBM bytes under a TPU perfect-fusion model: elementwise /
+            # convert / broadcast chains fuse into producers (zero extra
+            # HBM traffic); real traffic = matmul operands/results, data
+            # movement ops, reductions, and collectives.  The CPU HLO we
+            # analyze is NOT fused this way (CPU upcasts every bf16 dot to
+            # f32 and materializes it), so counting every op would inflate
+            # the memory term ~10x beyond a TPU program.
+            if op.replace("-start", "") in _MEMORY_OPS:
+                _, rb = _shape_elems(ins.result_type)
+                ob = 0
+                for oname in _OPERAND_RE.findall(ins.rest)[:6]:
+                    tt = comp.symbols.get(oname)
+                    if tt:
+                        ob += _shape_elems(tt)[1]
+                costs.bytes_accessed += w * (rb + ob)
+    return costs
+
+
+# Perfect-fusion HBM model: CPU kLoop fusion boundaries would fuse into
+# their producers/consumers on TPU, so they are excluded; what remains is
+# matmul/reduction/data-movement/collective traffic — a defensible floor.
+_MEMORY_OPS = {
+    "dot", "convolution", "reduce", "scatter", "gather", "dynamic-slice",
+    "dynamic-update-slice", "sort", "copy", "transpose",
+    "all-to-all", "all-gather", "all-reduce", "reduce-scatter",
+    "collective-permute",
+}

@@ -1,0 +1,132 @@
+"""Production training launcher with fault tolerance.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --steps 200 --batch 8 --seq 128 --smoke --ckpt /tmp/run1
+
+Features exercised end-to-end: checkpoint/restart (auto-resume from last
+committed step), async checkpointing, NaN-skip, step watchdog, straggler
+monitor, hot-expert rebalancing, preemption (SIGTERM -> checkpoint ->
+exit 42), --auto-restart supervisor loop.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+
+def supervise(argv) -> int:
+    """--auto-restart: relaunch the trainer on watchdog/preemption exits."""
+    attempts = 0
+    child_args = [a for a in argv if a != "--auto-restart"]
+    while True:
+        proc = subprocess.run([sys.executable, "-m", "repro.launch.train",
+                               *child_args])
+        if proc.returncode == 0:
+            return 0
+        attempts += 1
+        if attempts > int(os.environ.get("MAX_RESTARTS", "3")):
+            return proc.returncode
+        print(f"[supervisor] restart #{attempts} after exit "
+              f"{proc.returncode}", flush=True)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-sized)")
+    ap.add_argument("--lsh", default=None, choices=("on", "off"))
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--watchdog-s", type=float, default=600.0)
+    ap.add_argument("--auto-restart", action="store_true")
+    args = ap.parse_args()
+    if args.auto_restart:
+        return supervise(sys.argv[1:])
+
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint.checkpoint import CheckpointManager, load_checkpoint
+    from repro.configs.base import OptimizerConfig
+    from repro.configs.registry import get_config, get_smoke_config
+    from repro.data.pipeline import PrefetchIterator
+    from repro.data.synthetic import SyntheticLMDataset
+    from repro.launch.mesh import make_host_mesh
+    from repro.runtime.fault import (ExpertRebalancer, PreemptionHandler,
+                                     StepWatchdog, StragglerMonitor)
+    from repro.runtime.step import (TrainState, init_train_state,
+                                    make_train_step)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    opt = OptimizerConfig(lr=1e-3, warmup_steps=min(20, args.steps // 5),
+                          total_steps=args.steps)
+    mesh = make_host_mesh(1, 1)
+    use_lsh = None if args.lsh is None else (args.lsh == "on")
+
+    ds = SyntheticLMDataset(cfg.vocab_size, args.seq, args.batch,
+                            num_shards=jax.process_count(),
+                            shard=jax.process_index())
+    preempt = PreemptionHandler()
+    watchdog = StepWatchdog(args.watchdog_s)
+    straggler = StragglerMonitor()
+    mgr = CheckpointManager(args.ckpt, keep=3) if args.ckpt else None
+    rebalancer = None
+    if cfg.has_moe():
+        from repro.core.moe import padded_num_experts
+        rebalancer = ExpertRebalancer(cfg.moe.num_experts,
+                                      mesh.shape.get("model", 1))
+
+    with jax.set_mesh(mesh):
+        state = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh)
+        start = 0
+        if mgr and mgr.latest_step() is not None:
+            restored, start, _ = load_checkpoint(args.ckpt, state)
+            state = TrainState(*restored)
+            print(f"[train] resumed from step {start}", flush=True)
+        step_fn = jax.jit(make_train_step(cfg, opt, mesh, use_lsh=use_lsh,
+                                          microbatch=0))
+        for s in range(start, args.steps):
+            watchdog.arm()
+            t0 = time.time()
+            state, metrics = step_fn(state, ds.batch_at(s))
+            loss = float(metrics["loss"])  # blocks; completes the step
+            watchdog.disarm()
+            dt = time.time() - t0
+            if straggler.record(s, dt):
+                print(f"[straggler] step {s} took {dt:.2f}s "
+                      f"(ema {straggler.ema:.2f}s)", flush=True)
+            if rebalancer is not None:
+                rebalancer.record(np.asarray(metrics["expert_load"]))
+            if s % args.log_every == 0:
+                print(f"step {s} loss {loss:.4f} ce {float(metrics['ce']):.4f}"
+                      f" lr {float(metrics['lr']):.2e} {dt:.2f}s "
+                      f"skips {int(metrics['grad_skips'])}", flush=True)
+            want_ckpt = mgr and (s + 1) % args.ckpt_every == 0
+            if preempt.requested.is_set():
+                if mgr:
+                    mgr.save_async(s + 1, state)
+                    mgr.wait()
+                print("[train] preempted; checkpointed", flush=True)
+                return 42
+            if want_ckpt:
+                mgr.save_async(s + 1, state)
+        if mgr:
+            mgr.save_async(args.steps, state)
+            mgr.wait()
+    watchdog.stop()
+    print(f"[train] done: {args.steps} steps, final loss {loss:.4f}",
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

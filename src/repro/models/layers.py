@@ -1,0 +1,116 @@
+"""Primitive layers: norms, rotary embeddings, MLPs, initializers.
+
+Pure-functional: every layer is (init_fn, apply_fn) operating on explicit
+param pytrees (dicts).  Compute runs in the config dtype with f32 where
+numerically required (norms, softmax statistics)."""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, dtype, scale: float = 0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def fanin_init(key, shape, dtype):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    return normal_init(key, shape, dtype, scale=1.0 / math.sqrt(max(1, fan_in)))
+
+
+# ---------------------------------------------------------------- RMSNorm --
+
+def rmsnorm_init(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------ RoPE --
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, n, dh]; positions: [..., S] int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [..., S, 1, dh/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLPs --
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": fanin_init(ks[0], (d_model, d_ff), dtype),
+         "w_down": fanin_init(ks[1], (d_ff, d_model), dtype)}
+    if act == "swiglu":
+        p["w_gate"] = fanin_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def mlp_apply(params: Dict, x: jax.Array, act: str) -> jax.Array:
+    h = x @ params["w_up"]
+    if act == "swiglu":
+        g = x @ params["w_gate"]
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown act {act}")
+    return h @ params["w_down"]
+
+
+def expert_mlp_init(key, num_experts: int, d_model: int, d_ff: int, act: str, dtype) -> Dict:
+    """Stacked expert FFNs: leading dim = experts (sharded over `model`)."""
+    ks = jax.random.split(key, 3)
+    p = {"w_up": fanin_init(ks[0], (num_experts, d_model, d_ff), dtype),
+         "w_down": fanin_init(ks[1], (num_experts, d_ff, d_model), dtype)}
+    if act == "swiglu":
+        p["w_gate"] = fanin_init(ks[2], (num_experts, d_model, d_ff), dtype)
+    return p
+
+
+def expert_mlp_apply(params: Dict, x: jax.Array, act: str) -> jax.Array:
+    """x: [E, T, H] (tokens grouped per expert) -> [E, T, H]."""
+    h = jnp.einsum("eth,ehf->etf", x, params["w_up"])
+    if act == "swiglu":
+        g = jnp.einsum("eth,ehf->etf", x, params["w_gate"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    return jnp.einsum("etf,efh->eth", h, params["w_down"])
+
+
+# ------------------------------------------------------------- Embedding --
+
+def embedding_init(key, vocab: int, d_model: int, dtype) -> Dict:
+    return {"table": normal_init(key, (vocab, d_model), dtype, scale=0.02)}
+
+
+def embed(params: Dict, tokens: jax.Array) -> jax.Array:
+    return params["table"][tokens]
+
+
+def unembed(params: Dict, x: jax.Array) -> jax.Array:
+    """Logits in f32 (vocab-sharded downstream)."""
+    return (x @ params["table"].T.astype(x.dtype)).astype(jnp.float32)

@@ -1,0 +1,195 @@
+"""Mamba block in the SSD (mamba-2) chunked formulation.
+
+TPU adaptation (DESIGN.md §3): Jamba's Mamba-1 selective scan keeps a
+[d_inner, d_state] state per position — a scatter-heavy recurrence that maps
+poorly onto the MXU.  We implement the semiseparable (SSD) formulation:
+scalar-per-head decay, so a sequence chunk becomes two MXU contractions
+(intra-chunk "attention-like" quadratic + inter-chunk state passing) with an
+O(S/c) scan over chunks.  Heads shard over the `model` axis (TP).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import fanin_init, normal_init, rmsnorm, rmsnorm_init
+from repro.runtime.sharding import constrain
+
+
+def mamba_init(key, d_model: int, cfg, dtype) -> Dict:
+    d_inner = cfg.expand * d_model
+    nh = d_inner // cfg.head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": fanin_init(ks[0], (d_model, d_inner), dtype),
+        "w_x": fanin_init(ks[1], (d_model, d_inner), dtype),
+        "w_b": fanin_init(ks[2], (d_model, cfg.d_state), dtype),
+        "w_c": fanin_init(ks[3], (d_model, cfg.d_state), dtype),
+        "w_dt": fanin_init(ks[4], (d_model, nh), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "conv_w": normal_init(ks[5], (cfg.conv_width, d_inner), dtype, 0.2),
+        "w_out": fanin_init(ks[6], (d_inner, d_model), dtype),
+        "norm": rmsnorm_init(d_inner, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: [B,S,D]; w: [W,D]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):  # W is tiny (4): unrolled adds, fuses to one loop nest
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def _ssd_chunk_scan(xh, dt, a_log, Bm, Cm, chunk: int, mesh=None):
+    """Chunked SSD scan.
+
+    xh: [B,S,nh,dh]  dt: [B,S,nh] (post-softplus, f32)
+    Bm, Cm: [B,S,N] (f32)  a_log: [nh] (A = -exp(a_log))
+    Returns y: [B,S,nh,dh] (f32) and final state [B,nh,dh,N].
+    Heads shard over `model`; explicit constraints keep the scan carry and
+    the per-chunk quadratic terms sharded (unconstrained scan carries
+    otherwise replicate the whole loop body under GSPMD).
+    """
+    B, S, nh, dh = xh.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    n_chunks = S // c
+    assert n_chunks * c == S, "seq must be divisible by chunk"
+    A = -jnp.exp(a_log)                                   # [nh] negative
+    l = dt * A[None, None, :]                             # [B,S,nh] log decay
+
+    def resh(t, *trail):
+        return t.reshape((B, n_chunks, c) + trail).transpose(
+            (1, 0, 2) + tuple(range(3, 3 + len(trail))))
+
+    xc = resh(xh, nh, dh)          # [n,B,c,nh,dh] (bf16; f32 per chunk)
+    dtc = resh(dt, nh)             # [n,B,c,nh]
+    lc = resh(l, nh)               # [n,B,c,nh]
+    Bc = resh(Bm, N)               # [n,B,c,N]
+    Cc = resh(Cm, N)               # [n,B,c,N]
+
+    def shard(t, *ax):
+        return constrain(t, mesh, *ax) if mesh is not None else t
+
+    def body(h, inp):
+        xb, dtb, lb, Bb, Cb = inp
+        xb = xb.astype(jnp.float32)
+        L = jnp.cumsum(lb, axis=1)                        # [B,c,nh]
+        # intra-chunk: G[t,s] = (C_t·B_s) exp(L_t - L_s) dt_s for s<=t
+        cb = jnp.einsum("btn,bsn->bts", Cb, Bb)           # [B,c,c]
+        decay = L[:, :, None, :] - L[:, None, :, :]       # [B,t,s,nh]
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        G = jnp.where(mask[None, :, :, None],
+                      jnp.exp(jnp.minimum(decay, 0.0)) * cb[..., None], 0.0)
+        G = shard(G, "batch", None, None, "heads")
+        y = jnp.einsum("btsh,bshd->bthd", G * dtb[:, None, :, :], xb)
+        # inter-chunk: contribution of carried state + state update
+        y = y + jnp.einsum("btn,bhdn,bth->bthd", Cb, h, jnp.exp(L))
+        tail = jnp.exp(L[:, -1:, :] - L)                  # [B,c,nh]
+        dB = jnp.einsum("bsh,bsn->bshn", dtb * tail, Bb)  # [B,c,nh,N]
+        h_new = h * jnp.exp(L[:, -1, :])[:, :, None, None] + \
+            jnp.einsum("bshn,bshd->bhdn", dB, xb)
+        h_new = shard(h_new, "batch", "heads", None, None)
+        return h_new, shard(y.astype(xh.dtype), "batch", None, "heads", None)
+
+    h0 = jnp.zeros((B, nh, dh, N), jnp.float32)
+    h0 = shard(h0, "batch", "heads", None, None)
+    # checkpoint the chunk body: backward otherwise saves the O(c^2) decay/
+    # score tensors for EVERY chunk at once (flash-style recompute instead).
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable,
+                          prevent_cse=False)
+    h_fin, yc = jax.lax.scan(body, h0, (xc, dtc, lc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, dh)
+    return y, h_fin
+
+
+def mamba_apply(params: Dict, x: jax.Array, cfg, norm_eps: float = 1e-5,
+                mesh=None) -> jax.Array:
+    """Full-sequence forward (train / prefill). x: [B,S,H]."""
+    B, S, H = x.shape
+    d_inner = cfg.expand * H
+    nh = d_inner // cfg.head_dim
+
+    def shard(t, *ax):
+        return constrain(t, mesh, *ax) if mesh is not None else t
+
+    if mesh is not None:
+        # SP->TP: one explicit bf16 all-gather feeding all projections;
+        # transpose = one bf16 psum_scatter for dL/dx.
+        from repro.runtime.tp import tp_in_project
+        z, xr, Bm0, Cm0, dt0 = tp_in_project(
+            x, (params["w_z"], params["w_x"], params["w_b"], params["w_c"],
+                params["w_dt"]), mesh)
+    else:
+        z = x @ params["w_z"]
+        xr = x @ params["w_x"]
+        Bm0 = x @ params["w_b"]
+        Cm0 = x @ params["w_c"]
+        dt0 = x @ params["w_dt"]
+    xs = _causal_conv(shard(xr, "batch", None, "heads"), params["conv_w"])
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+    Bm = Bm0.astype(jnp.float32)
+    Cm = Cm0.astype(jnp.float32)
+    dt = shard(jax.nn.softplus(dt0.astype(jnp.float32)
+                               + params["dt_bias"]), "batch", None, "heads")
+    xh = shard(xs.reshape(B, S, nh, cfg.head_dim), "batch", None, "heads", None)
+    y, _ = _ssd_chunk_scan(xh, dt, params["a_log"], Bm, Cm, cfg.chunk_size,
+                           mesh=mesh)
+    y = y + params["d_skip"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner)
+    y = (y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    y = rmsnorm(params["norm"], y, norm_eps)
+    if mesh is not None:
+        # TP->SP: explicit bf16 reduce-scatter on the contraction
+        from repro.runtime.tp import tp_project
+        return tp_project(y, params["w_out"], mesh)
+    return y @ params["w_out"]
+
+
+# ------------------------------------------------------------------ decode --
+
+def init_mamba_state(batch: int, d_model: int, cfg, dtype) -> Dict:
+    d_inner = cfg.expand * d_model
+    nh = d_inner // cfg.head_dim
+    return {
+        "h": jnp.zeros((batch, nh, cfg.head_dim, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_inner), dtype),
+    }
+
+
+def mamba_decode(params: Dict, x: jax.Array, state: Dict, cfg,
+                 norm_eps: float = 1e-5) -> Tuple[jax.Array, Dict]:
+    """One-step recurrence. x: [B,1,H] -> ([B,1,H], new state). O(1) in S."""
+    B, _, H = x.shape
+    d_inner = cfg.expand * H
+    nh = d_inner // cfg.head_dim
+    xt = x[:, 0, :]
+    z = xt @ params["w_z"]
+    xr = xt @ params["w_x"]                                # [B,d_inner]
+    conv_buf = jnp.concatenate([state["conv"], xr[:, None, :]], axis=1)
+    w = params["conv_w"]
+    xc = jnp.einsum("bwd,wd->bd", conv_buf.astype(jnp.float32),
+                    w.astype(jnp.float32))
+    xs = jax.nn.silu(xc)
+    Bm = (xt @ params["w_b"]).astype(jnp.float32)          # [B,N]
+    Cm = (xt @ params["w_c"]).astype(jnp.float32)
+    dt = jax.nn.softplus((xt @ params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"])              # [B,nh]
+    a = jnp.exp(dt * (-jnp.exp(params["a_log"]))[None, :])  # [B,nh]
+    xh = xs.reshape(B, nh, cfg.head_dim)
+    h = state["h"] * a[..., None, None] + jnp.einsum(
+        "bhd,bn,bh->bhdn", xh, Bm, dt)
+    y = jnp.einsum("bhdn,bn->bhd", h, Cm) + \
+        params["d_skip"][None, :, None] * xh
+    y = (y.reshape(B, d_inner) * jax.nn.silu(z.astype(jnp.float32)))
+    y = rmsnorm(params["norm"], y.astype(x.dtype), norm_eps)
+    out = (y @ params["w_out"])[:, None, :]
+    return out, {"h": h, "conv": conv_buf[:, 1:, :]}

@@ -1,0 +1,245 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential recurrence) — arXiv:2405.04517.
+
+mLSTM is exponential-gated linear attention; we compute it chunkwise (like
+the SSD scan in ssm.py) so the inner work is MXU contractions, with carried
+(C, n, m) state and per-chunk max-stabilization.  sLSTM has hidden-to-hidden
+recurrence and is inherently sequential: a lax.scan over time (O(1) state,
+the reason this family runs the 500k decode cell).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import fanin_init, rmsnorm, rmsnorm_init
+from repro.runtime.sharding import constrain
+
+# ----------------------------------------------------------------- mLSTM --
+
+
+def mlstm_init(key, d_model: int, head_dim: int, proj_factor: float, dtype) -> Dict:
+    d_in = int(proj_factor * d_model)
+    d_in -= d_in % head_dim
+    nh = d_in // head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": fanin_init(ks[0], (d_model, d_in), dtype),
+        "w_z": fanin_init(ks[1], (d_model, d_in), dtype),
+        "w_q": fanin_init(ks[2], (d_in, d_in), dtype),
+        "w_k": fanin_init(ks[3], (d_in, d_in), dtype),
+        "w_v": fanin_init(ks[4], (d_in, d_in), dtype),
+        "w_if": fanin_init(ks[5], (d_in, 2 * nh), dtype),
+        "b_if": jnp.zeros((2 * nh,), jnp.float32),
+        "w_down": fanin_init(ks[6], (d_in, d_model), dtype),
+        "norm": rmsnorm_init(d_in, dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, state, chunk: int, mesh=None):
+    """q/k/v: [B,S,nh,dh] f32; log_i/log_f: [B,S,nh] f32.
+    state: (C [B,nh,dh,dh], n [B,nh,dh], m [B,nh]).  Returns y, new state."""
+    B, S, nh, dh = q.shape
+    c = min(chunk, S)
+    n_chunks = S // c
+    assert n_chunks * c == S
+
+    def shard(t, *ax):
+        return constrain(t, mesh, *ax) if mesh is not None else t
+
+    def resh(t, *trail):
+        return t.reshape((B, n_chunks, c) + trail).transpose(
+            (1, 0, 2) + tuple(range(3, 3 + len(trail))))
+
+    qc, kc, vc = (resh(t, nh, dh) for t in (q, k, v))
+    lic, lfc = resh(log_i, nh), resh(log_f, nh)
+
+    def body(carry, inp):
+        C, n, m = carry
+        qb, kb, vb, li, lf = inp
+        qb, kb, vb = (t.astype(jnp.float32) for t in (qb, kb, vb))
+        F = jnp.cumsum(lf, axis=1)                      # [B,c,nh] inclusive
+        # pairwise log weights b[t,s] = F_t - F_s + li_s  (s <= t)
+        bmat = F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :]
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        bmat = jnp.where(mask[None, :, :, None], bmat, -jnp.inf)
+        inter_log = F + m[:, None, :]                   # [B,c,nh]
+        m_t = jnp.maximum(bmat.max(axis=2), inter_log)  # [B,c,nh]
+        m_t = jnp.maximum(m_t, -1e30)
+        w = jnp.exp(bmat - m_t[:, :, None, :])          # [B,t,s,nh]
+        inter = jnp.exp(inter_log - m_t)                # [B,c,nh]
+        scale = dh ** -0.5
+        qk = jnp.einsum("bthd,bshd->btsh", qb, kb) * scale
+        num = jnp.einsum("btsh,bshd->bthd", qk * w, vb) + \
+            jnp.einsum("bthd,bhde,bth->bthe", qb * scale, C, inter)
+        den_vec = jnp.einsum("btsh,bshd->bthd", w, kb) + \
+            n[:, None, :, :] * inter[..., None]
+        den = jnp.abs(jnp.einsum("bthd,bthd->bth", qb * scale, den_vec))
+        y = num / jnp.maximum(den, jnp.exp(-m_t))[..., None]
+        # chunk-end state
+        m_new = jnp.maximum(F[:, -1, :] + m, (F[:, -1:, :] - F + li).max(axis=1))
+        carry_scale = jnp.exp(F[:, -1, :] + m - m_new)  # [B,nh]
+        tok_scale = jnp.exp(F[:, -1:, :] - F + li - m_new[:, None, :])
+        C_new = C * carry_scale[..., None, None] + jnp.einsum(
+            "bshd,bshe,bsh->bhde", kb, vb, tok_scale)
+        n_new = n * carry_scale[..., None] + jnp.einsum(
+            "bshd,bsh->bhd", kb, tok_scale)
+        C_new = shard(C_new, "batch", "heads", None, None)
+        return (C_new, n_new, m_new), shard(y.astype(q.dtype),
+                                            "batch", None, "heads", None)
+
+    state = (shard(state[0], "batch", "heads", None, None),
+             shard(state[1], "batch", "heads", None),
+             shard(state[2], "batch", "heads"))
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable,
+                          prevent_cse=False)
+    (C, n, m), yc = jax.lax.scan(body, state, (qc, kc, vc, lic, lfc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, dh)
+    return y, (C, n, m)
+
+
+def mlstm_apply(params: Dict, x: jax.Array, head_dim: int, chunk: int,
+                norm_eps: float = 1e-5, mesh=None) -> jax.Array:
+    B, S, H = x.shape
+    d_in = params["w_up"].shape[1]
+    nh = d_in // head_dim
+
+    def shard(t, *ax):
+        return constrain(t, mesh, *ax) if mesh is not None else t
+
+    if mesh is not None:
+        from repro.runtime.tp import tp_in_project
+        u, z = tp_in_project(x, (params["w_up"], params["w_z"]), mesh)
+    else:
+        u = x @ params["w_up"]
+        z = x @ params["w_z"]
+    q = shard((u @ params["w_q"]).reshape(B, S, nh, head_dim),
+              "batch", None, "heads", None)
+    k = shard((u @ params["w_k"]).reshape(B, S, nh, head_dim),
+              "batch", None, "heads", None)
+    v = shard((u @ params["w_v"]).reshape(B, S, nh, head_dim),
+              "batch", None, "heads", None)
+    gf = (u @ params["w_if"]).astype(jnp.float32) + params["b_if"]
+    log_i, log_f = gf[..., :nh], jax.nn.log_sigmoid(gf[..., nh:])
+    state = (jnp.zeros((B, nh, head_dim, head_dim), jnp.float32),
+             jnp.zeros((B, nh, head_dim), jnp.float32),
+             jnp.zeros((B, nh), jnp.float32))
+    y, _ = _mlstm_chunk(q, k, v, log_i, log_f, state, chunk, mesh=mesh)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    if mesh is not None:
+        from repro.runtime.tp import tp_project
+        return tp_project(y, params["w_down"], mesh)  # TP->SP bf16 RS
+    return y @ params["w_down"]
+
+
+def init_mlstm_state(batch: int, d_model: int, head_dim: int,
+                     proj_factor: float) -> Tuple:
+    d_in = int(proj_factor * d_model)
+    d_in -= d_in % head_dim
+    nh = d_in // head_dim
+    return (jnp.zeros((batch, nh, head_dim, head_dim), jnp.float32),
+            jnp.zeros((batch, nh, head_dim), jnp.float32),
+            jnp.zeros((batch, nh), jnp.float32))
+
+
+def mlstm_decode(params: Dict, x: jax.Array, state: Tuple, head_dim: int,
+                 norm_eps: float = 1e-5) -> Tuple[jax.Array, Tuple]:
+    """x: [B,1,H] one-step recurrence."""
+    B = x.shape[0]
+    d_in = params["w_up"].shape[1]
+    nh = d_in // head_dim
+    u = (x[:, 0, :] @ params["w_up"])
+    z = x[:, 0, :] @ params["w_z"]
+    q = (u @ params["w_q"]).reshape(B, nh, head_dim).astype(jnp.float32)
+    k = (u @ params["w_k"]).reshape(B, nh, head_dim).astype(jnp.float32)
+    v = (u @ params["w_v"]).reshape(B, nh, head_dim).astype(jnp.float32)
+    gf = (u @ params["w_if"]).astype(jnp.float32) + params["b_if"]
+    log_i, log_f = gf[..., :nh], jax.nn.log_sigmoid(gf[..., nh:])
+    C, n, m = state
+    m_new = jnp.maximum(log_f + m, log_i)
+    f_s = jnp.exp(log_f + m - m_new)
+    i_s = jnp.exp(log_i - m_new)
+    C = C * f_s[..., None, None] + jnp.einsum("bhd,bhe,bh->bhde", k, v, i_s)
+    n = n * f_s[..., None] + k * i_s[..., None]
+    scale = head_dim ** -0.5
+    num = jnp.einsum("bhd,bhde->bhe", q * scale, C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q * scale, n))
+    y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    y = y.reshape(B, d_in).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return (y @ params["w_down"])[:, None, :], (C, n, m_new)
+
+
+# ----------------------------------------------------------------- sLSTM --
+
+
+def slstm_init(key, d_model: int, num_heads: int, proj_factor: float, dtype) -> Dict:
+    ks = jax.random.split(key, 4)
+    d_up = int(proj_factor * d_model)
+    return {
+        "w_gates": fanin_init(ks[0], (d_model, 4 * d_model), dtype),
+        "r_gates": fanin_init(ks[1], (d_model, 4 * d_model), dtype),
+        "b_gates": jnp.zeros((4 * d_model,), jnp.float32),
+        "w_up": fanin_init(ks[2], (d_model, 2 * d_up), dtype),
+        "w_down": fanin_init(ks[3], (d_up, d_model), dtype),
+        "norm": rmsnorm_init(d_model, dtype),
+    }
+
+
+def _slstm_cell(params, xt, state):
+    """xt: [B,H] (pre-computed W x); state: (c, n, h, m) each [B,H]."""
+    c, n, h, m = state
+    g = xt + h @ params["r_gates"].astype(jnp.float32) + params["b_gates"]
+    H = c.shape[-1]
+    zi, ii, fi, oi = g[:, :H], g[:, H:2*H], g[:, 2*H:3*H], g[:, 3*H:]
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    log_f = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(log_f + m, ii)
+    i_s = jnp.exp(ii - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_apply(params: Dict, x: jax.Array, norm_eps: float = 1e-5) -> jax.Array:
+    """Sequential scan over time. x: [B,S,H]."""
+    B, S, H = x.shape
+    xw = (x @ params["w_gates"]).astype(jnp.float32)     # [B,S,4H]
+
+    def body(state, xt):
+        st = _slstm_cell(params, xt, state)
+        return st, st[2]
+
+    init = tuple(jnp.zeros((B, H), jnp.float32) for _ in range(4))
+    _, hs = jax.lax.scan(body, init, xw.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)            # [B,S,H]
+    y = rmsnorm(params["norm"], y, norm_eps)
+    u = y @ params["w_up"]
+    d_up = u.shape[-1] // 2
+    y = jax.nn.gelu(u[..., :d_up].astype(jnp.float32)).astype(x.dtype) * u[..., d_up:]
+    return y @ params["w_down"]
+
+
+def init_slstm_state(batch: int, d_model: int) -> Tuple:
+    return tuple(jnp.zeros((batch, d_model), jnp.float32) for _ in range(4))
+
+
+def slstm_decode(params: Dict, x: jax.Array, state: Tuple,
+                 norm_eps: float = 1e-5) -> Tuple[jax.Array, Tuple]:
+    xw = (x[:, 0, :] @ params["w_gates"]).astype(jnp.float32)
+    st = _slstm_cell(params, xw, state)
+    y = st[2].astype(x.dtype)[:, None, :]
+    y = rmsnorm(params["norm"], y, norm_eps)
+    u = y @ params["w_up"]
+    d_up = u.shape[-1] // 2
+    y = jax.nn.gelu(u[..., :d_up].astype(jnp.float32)).astype(x.dtype) * u[..., d_up:]
+    return y @ params["w_down"], st

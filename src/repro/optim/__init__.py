@@ -1,0 +1,2 @@
+from repro.optim.adam import adamw_init, adamw_update, OptState
+from repro.optim.schedule import warmup_cosine

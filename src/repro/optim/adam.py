@@ -1,0 +1,129 @@
+"""AdamW with optional block-quantized int8 moments.
+
+At 398B params × 16 B/param, plain f32-Adam state cannot fit 256 × 16 GB
+v5e chips.  ``moment_dtype="int8"`` stores both moments as int8 with a
+per-block (128 elements) f32 absmax scale — ~1.03 B/param/moment — bringing
+total train state to ≈6 B/param (bf16 params + bf16 grads + 2×int8 moments).
+Dequant→update→requant happens inside the (sharded) update, so the f32
+moments never exist globally.  Integer leaves (e.g. MoE `placement`) are
+skipped (their grads are float0 under ``allow_int=True``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+_BLOCK = 128
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    grad_skips: jax.Array       # non-finite-loss skip counter (fault tolerance)
+
+
+def _is_trainable(x) -> bool:
+    return jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating) if not hasattr(
+        x, "dtype") else jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def _quant(x: jax.Array) -> Dict:
+    """Blockwise absmax int8 quantization along the last axis.
+
+    q keeps the parameter's shape (last dim padded to a 128 multiple) so it
+    inherits the parameter's sharding; scale is [..., n_blocks] f32."""
+    shape = x.shape
+    pad = (-shape[-1]) % _BLOCK
+    xf = jnp.pad(x.astype(jnp.float32), [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xf.reshape(shape[:-1] + (-1, _BLOCK))
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    q = jnp.round(xb / jnp.maximum(scale[..., None], 1e-12)).astype(jnp.int8)
+    return {"q": q.reshape(shape[:-1] + (-1,)),
+            "scale": scale.astype(jnp.float32)}
+
+
+def _dequant(d: Dict, shape) -> jax.Array:
+    nb = d["scale"].shape[-1]
+    xb = d["q"].astype(jnp.float32).reshape(shape[:-1] + (nb, _BLOCK))
+    x = (xb * d["scale"][..., None]).reshape(shape[:-1] + (nb * _BLOCK,))
+    return x[..., :shape[-1]]
+
+
+def _moment_init(p, dtype: str):
+    if not jnp.issubdtype(p.dtype, jnp.floating):
+        return None
+    if dtype == "int8":
+        return _quant(jnp.zeros_like(p, jnp.float32))
+    return jnp.zeros_like(p, jnp.dtype(dtype))
+
+
+def adamw_init(params, cfg: OptimizerConfig) -> OptState:
+    m = jax.tree.map(lambda p: _moment_init(p, cfg.moment_dtype), params)
+    v = jax.tree.map(lambda p: _moment_init(p, cfg.moment_dtype), params)
+    return OptState(jnp.zeros((), jnp.int32), m, v,
+                    jnp.zeros((), jnp.int32))
+
+
+def global_norm(grads) -> jax.Array:
+    leaves = [g for g in jax.tree.leaves(grads)
+              if hasattr(g, "dtype") and g.dtype != jax.dtypes.float0]
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def adamw_update(params, grads, state: OptState, cfg: OptimizerConfig,
+                 lr: jax.Array, skip: jax.Array | None = None
+                 ) -> Tuple[Any, OptState]:
+    """One AdamW step. `skip`: bool scalar — when True (non-finite loss),
+    parameters and moments pass through unchanged (fault tolerance)."""
+    step = state.step + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    if skip is None:
+        skip = ~jnp.isfinite(gn)
+    else:
+        skip = skip | ~jnp.isfinite(gn)
+    keep = (~skip).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        if (not hasattr(g, "dtype")) or g.dtype == jax.dtypes.float0 \
+                or not jnp.issubdtype(p.dtype, jnp.floating):
+            return p, m, v
+        gf = g.astype(jnp.float32) * scale
+        mf = _dequant(m, p.shape) if cfg.moment_dtype == "int8" \
+            else m.astype(jnp.float32)
+        vf = _dequant(v, p.shape) if cfg.moment_dtype == "int8" \
+            else v.astype(jnp.float32)
+        mf = cfg.b1 * mf + (1 - cfg.b1) * gf
+        vf = cfg.b2 * vf + (1 - cfg.b2) * jnp.square(gf)
+        upd = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        pf = p.astype(jnp.float32)
+        # explicit where: keep*NaN would still poison the parameters
+        p_new = jnp.where(skip, pf, pf - lr * upd).astype(p.dtype)
+        if cfg.moment_dtype == "int8":
+            mix = lambda new, old: jax.tree.map(
+                lambda a, b: jnp.where(skip, b, a), new, old)
+            m_new, v_new = mix(_quant(mf), m), mix(_quant(vf), v)
+        else:
+            m_new = jnp.where(skip, m, mf.astype(m.dtype))
+            v_new = jnp.where(skip, v, vf.astype(v.dtype))
+        return p_new, m_new, v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v,
+                           state.grad_skips + skip.astype(jnp.int32))

@@ -1,0 +1,128 @@
+"""Fault tolerance & straggler mitigation for long-running training.
+
+Components (DESIGN.md §7):
+ * ``StepWatchdog`` — aborts the process (exit 43) if a step exceeds a
+   timeout (hung collective / dead peer); the auto-restart launcher
+   relaunches from the last committed checkpoint.
+ * ``StragglerMonitor`` — per-step wall-time EMA; flags steps slower than
+   ``threshold×`` the EMA (on real fleets this feeds re-pod decisions).
+ * ``ExpertRebalancer`` — per-expert load EMA from the MoE layer's psum'd
+   counts; emits a placement permutation that pairs hot experts with cold
+   ranks (applied at checkpoint boundaries via
+   core.lsh_moe.apply_placement_update).
+ * ``PreemptionHandler`` — SIGTERM → request checkpoint → exit 42.
+ * non-finite-loss step skipping lives in optim/adam.py (grad_skips).
+"""
+from __future__ import annotations
+
+import os
+import signal
+import threading
+import time
+from typing import Callable, List, Optional
+
+import numpy as np
+
+EXIT_PREEMPTED = 42
+EXIT_WATCHDOG = 43
+
+
+class StepWatchdog:
+    def __init__(self, timeout_s: float, on_timeout: Optional[Callable] = None):
+        self.timeout_s = timeout_s
+        self.on_timeout = on_timeout or (lambda: os._exit(EXIT_WATCHDOG))
+        self._deadline = None
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def arm(self):
+        with self._lock:
+            self._deadline = time.monotonic() + self.timeout_s
+
+    def disarm(self):
+        with self._lock:
+            self._deadline = None
+
+    def stop(self):
+        self._stop.set()
+
+    def _run(self):
+        while not self._stop.wait(0.5):
+            with self._lock:
+                d = self._deadline
+            if d is not None and time.monotonic() > d:
+                self.on_timeout()
+                return
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, ema: float = 0.9):
+        self.threshold = threshold
+        self.ema_coef = ema
+        self.ema: Optional[float] = None
+        self.flagged: List[int] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        is_straggler = (self.ema is not None
+                        and dt > self.threshold * self.ema)
+        if is_straggler:
+            self.flagged.append(step)
+        self.ema = dt if self.ema is None else \
+            self.ema_coef * self.ema + (1 - self.ema_coef) * dt
+        return is_straggler
+
+
+class ExpertRebalancer:
+    """Greedy hot/cold pairing: sort experts by load EMA, assign
+    round-robin best-fit to ranks so per-rank load is even."""
+
+    def __init__(self, num_experts: int, num_ranks: int, ema: float = 0.95,
+                 imbalance_trigger: float = 1.5):
+        self.num_experts = num_experts
+        self.num_ranks = num_ranks
+        self.ema_coef = ema
+        self.trigger = imbalance_trigger
+        self.load = np.zeros(num_experts)
+
+    def record(self, counts: np.ndarray):
+        c = np.asarray(counts)[: self.num_experts]
+        self.load = self.ema_coef * self.load + (1 - self.ema_coef) * c
+
+    def imbalance(self, placement: np.ndarray) -> float:
+        per_rank = np.zeros(self.num_ranks)
+        e_per = max(1, int(np.ceil(self.num_experts / self.num_ranks)))
+        for e in range(self.num_experts):
+            per_rank[placement[e] // e_per] += self.load[e]
+        mean = max(per_rank.mean(), 1e-9)
+        return float(per_rank.max() / mean)
+
+    def propose(self, placement: np.ndarray) -> Optional[np.ndarray]:
+        """Return a new placement if imbalance exceeds the trigger."""
+        if self.imbalance(placement) < self.trigger:
+            return None
+        order = np.argsort(-self.load)          # hot first
+        e_per = max(1, int(np.ceil(self.num_experts / self.num_ranks)))
+        rank_load = np.zeros(self.num_ranks)
+        rank_fill = np.zeros(self.num_ranks, dtype=int)
+        new_placement = np.zeros(self.num_experts, dtype=np.int32)
+        for e in order:                          # best-fit decreasing
+            open_ranks = np.where(rank_fill < e_per)[0]
+            r = open_ranks[np.argmin(rank_load[open_ranks])]
+            new_placement[e] = r * e_per + rank_fill[r]
+            rank_fill[r] += 1
+            rank_load[r] += self.load[e]
+        return new_placement
+
+
+class PreemptionHandler:
+    def __init__(self):
+        self.requested = threading.Event()
+        try:
+            signal.signal(signal.SIGTERM, self._handle)
+        except ValueError:
+            pass  # not main thread (tests)
+
+    def _handle(self, signum, frame):
+        self.requested.set()

@@ -1,0 +1,215 @@
+"""Path-based parameter/state sharding rules (DESIGN.md §4).
+
+Every parameter path maps to logical axes, resolved against the mesh by
+runtime/sharding.py.  Block parameters are stacked [num_super_blocks, ...]
+(leading None).  Int8-quantized optimizer moments ({"q","scale"} dicts)
+shard their block dimension over `data`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.runtime.sharding import dp_axes, resolve
+
+_MATRIX_RULES = {
+    "wq": ("fsdp", "heads"), "wk": ("fsdp", "heads"), "wv": ("fsdp", "heads"),
+    "wo": ("heads", "fsdp"),
+    "w_z": ("fsdp", "heads"), "w_x": ("fsdp", "heads"),
+    "w_dt": ("fsdp", "heads"), "w_b": ("fsdp", None), "w_c": ("fsdp", None),
+    "w_out": ("heads", "fsdp"),
+    "w_q": ("fsdp", "heads"), "w_k": ("fsdp", "heads"), "w_v": ("fsdp", "heads"),
+    "w_if": ("fsdp", "heads"),
+    "w_gates": ("fsdp", "heads"), "r_gates": ("fsdp", "heads"),
+    "conv_w": (None, "heads"),
+}
+_VECTOR_RULES = {
+    "dt_bias": ("heads",), "a_log": ("heads",), "d_skip": ("heads",),
+    "b_if": ("heads",), "b_gates": ("heads",),
+}
+_REPLICATED = {"router_w", "lsh_rot", "placement", "scale"}
+
+
+def _leaf_logical(path_names, leaf) -> tuple:
+    last = path_names[-1]
+    stacked = "blocks" in path_names
+    nd = leaf.ndim - (1 if stacked else 0)
+    if last == "table":                       # embedding [V, H]
+        base = ("vocab", None)
+    elif last == "w" and "head" in path_names:  # lm head [H, V]
+        base = ("fsdp", "vocab")
+    elif last in _REPLICATED:
+        base = (None,) * nd
+    elif last in ("w_up", "w_gate", "w_down"):
+        if nd == 3:                           # MoE experts [E, ., .]
+            base = ("experts", "fsdp", None)
+        else:                                 # dense [H,F] / [F,H]
+            base = ("fsdp", "mlp") if last != "w_down" else ("mlp", "fsdp")
+    elif last in _MATRIX_RULES:
+        base = _MATRIX_RULES[last]
+    elif last in _VECTOR_RULES:
+        base = _VECTOR_RULES[last]
+    else:
+        base = (None,) * nd
+    if stacked:
+        base = (None,) + tuple(base)
+    if len(base) != leaf.ndim:                # safety: replicate on mismatch
+        base = (None,) * leaf.ndim
+    return base
+
+
+def _divisible(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec entries whose dim doesn't divide evenly across the assigned
+    axes (jit input/output shardings require exact divisibility; internal
+    constraints may pad, but arguments may not).  Tuple entries are trimmed
+    from the right until the product divides (e.g. batch over
+    (data, model) degrades to (data,) for small batches)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(entry)
+            continue
+        axes = list((entry,) if isinstance(entry, str) else entry)
+        while axes:
+            n = 1
+            for a in axes:
+                n *= mesh.shape.get(a, 1)
+            if n > 0 and shape[i] % n == 0:
+                break
+            axes.pop()
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(tuple(axes))
+    return P(*out)
+
+
+def param_specs(params, mesh: Mesh):
+    """Pytree of PartitionSpec matching `params` (arrays or ShapeDtypeStruct)."""
+    def one(path, leaf):
+        names = [_pname(p) for p in path]
+        spec = resolve(mesh, *_leaf_logical(names, leaf))
+        return _divisible(spec, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh))
+
+
+def _pname(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def moment_specs(params, mesh: Mesh, moment_dtype: str):
+    """Specs for optimizer moments mirroring `params` (int8: {"q","scale"}).
+    Int params (e.g. MoE `placement`) have no moments (None)."""
+    d = mesh.shape.get("data", 1)
+
+    def one(path, leaf):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return None
+        names = [_pname(p) for p in path]
+        spec = resolve(mesh, *_leaf_logical(names, leaf))
+        if moment_dtype != "int8":
+            return _divisible(spec, leaf.shape, mesh)
+        # q keeps the param shape with the last dim padded to 128-multiples.
+        # scale is [..., n_blocks]: n_blocks is often tiny — replicate it.
+        q_shape = leaf.shape[:-1] + (-(-leaf.shape[-1] // 128) * 128,)
+        q_spec = _divisible(spec, q_shape, mesh)
+        entries = list(q_spec) + [None] * (leaf.ndim - len(q_spec))
+        scale_spec = P(*(entries[:-1] + [None])) if entries else P()
+        return {"q": q_spec, "scale": scale_spec}
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> Dict:
+    tok = resolve(mesh, "batch", None)
+    out = {"tokens": tok, "labels": tok}
+    if cfg.encoder_decoder:
+        out["frames"] = resolve(mesh, "batch", "seq", None)
+    if cfg.frontend == "patch_stub":
+        out["patch_embeds"] = resolve(mesh, "batch", None, None)
+    return out
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, mesh: Mesh,
+                       max_len: int = 0) -> Dict:
+    """Sharding for init_decode_state output (pjit INPUTS: every sharded dim
+    must divide evenly).  Big-batch decode: batch->dp, cache seq->model.
+    batch==1 long-context decode: cache seq->(data, model)."""
+    dp = dp_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    n_model = mesh.shape.get("model", 1)
+
+    def ok(n, size):
+        return size > 0 and n > 0 and size % n == 0
+
+    big_batch = ok(n_dp, batch)
+    bspec = (dp if len(dp) > 1 else (dp[0] if dp else None)) if big_batch else None
+    if big_batch:
+        seq_spec = "model" if ok(n_model, max_len) else None
+    else:
+        n_all = n_dp * n_model
+        if ok(n_all, max_len):
+            seq_spec = tuple(dp) + ("model",)
+        elif ok(n_dp, max_len):
+            seq_spec = tuple(dp) if len(dp) > 1 else (dp[0] if dp else None)
+        else:
+            seq_spec = None
+
+    def maybe(axis, dim):
+        """Use axis only if the dim divides evenly (pjit input rule)."""
+        return axis if ok(n_model, dim) else None
+
+    dh = cfg.resolved_head_dim
+    d_inner = cfg.ssm.expand * cfg.d_model
+    nh_m = d_inner // cfg.ssm.head_dim
+    d_in_x = int(cfg.xlstm.mlstm_proj_factor * cfg.d_model)
+    d_in_x -= d_in_x % dh
+    nh_x = d_in_x // dh
+    entries = []
+    for mixer, _ in cfg.layout:
+        if mixer == "attn":
+            if seq_spec is not None and "model" in (
+                    seq_spec if isinstance(seq_spec, tuple) else (seq_spec,)):
+                head_spec, dh_spec = None, None   # model already on seq
+            else:
+                head_spec = maybe("model", cfg.num_kv_heads)
+                dh_spec = None if head_spec else maybe("model", dh)
+            kv = P(None, bspec, seq_spec, head_spec, dh_spec)
+            st = {"k": kv, "v": kv}
+            if cfg.encoder_decoder:
+                st["cross_k"] = kv
+                st["cross_v"] = kv
+        elif mixer == "mamba":
+            st = {"h": P(None, bspec, maybe("model", nh_m), None, None),
+                  "conv": P(None, bspec, None, maybe("model", d_inner))}
+        elif mixer == "mlstm":
+            hspec = maybe("model", nh_x)
+            dspec = None if hspec else maybe("model", dh)
+            st = {"C": P(None, bspec, hspec, dspec, None),
+                  "n": P(None, bspec, hspec, dspec),
+                  "m": P(None, bspec, hspec)}
+        elif mixer == "slstm":
+            st = {n: P(None, bspec, maybe("model", cfg.d_model))
+                  for n in ("c", "n", "h", "m")}
+        else:
+            st = {}
+        entries.append(st)
+    return {"entries": entries, "position": P()}

@@ -1,0 +1,115 @@
+"""Logical-axis sharding rules → PartitionSpecs / NamedShardings.
+
+Mesh axes (see launch/mesh.py):
+  pod    — data parallelism across pods (DCI); absent on single-pod meshes.
+  data   — data parallelism + FSDP parameter/optimizer sharding (ICI).
+  model  — tensor parallelism (heads / mlp-hidden / vocab) and expert
+           parallelism (experts live on the model axis; the MoE all-to-all
+           runs over it).
+
+Logical tensor axes used by the model code:
+  "batch"   -> (pod, data)      activation batch
+  "seq"     -> model            sequence parallelism between blocks
+  "heads"   -> model            TP over attention / mamba / mlstm heads
+  "mlp"     -> model            TP over FFN hidden
+  "vocab"   -> model            vocab-sharded embedding / logits
+  "experts" -> model            expert parallelism
+  "fsdp"    -> data             parameter storage sharding (ZeRO-3 style)
+  "kv_seq"  -> data             long-context decode: KV cache sharded on seq
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+RULES = {
+    "batch": ("pod", "data"),
+    "seq": ("model",),
+    "heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "fsdp": ("data",),
+    "kv_seq": ("data",),
+    None: (),
+}
+
+# Pure data parallelism profile: small models (<1B) on a 256-chip mesh are
+# interconnect-bound under TP — batch shards over EVERY axis and weights
+# replicate, leaving only the gradient all-reduce on the wire.
+_DP_ONLY_RULES = {
+    "batch": ("pod", "data", "model"),
+    "seq": (), "heads": (), "mlp": (), "vocab": (), "experts": (),
+    "fsdp": ("data",),          # params/moments still FSDP over data
+    "kv_seq": ("data",),
+    None: (),
+}
+
+_dp_only_var: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_dp_only", default=False)
+
+
+def dp_only_active() -> bool:
+    return _dp_only_var.get()
+
+
+@contextlib.contextmanager
+def parallelism_profile(dp_only: bool):
+    """Trace-time switch between the TP/EP rules and the pure-DP rules."""
+    tok = _dp_only_var.set(bool(dp_only))
+    try:
+        yield
+    finally:
+        _dp_only_var.reset(tok)
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes carrying pure data parallelism ('pod' only on multi-pod)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def resolve(mesh: Mesh, *logical: Optional[Union[str, Tuple[str, ...]]]) -> P:
+    """Translate logical axis names into a PartitionSpec valid on `mesh`."""
+    rules = _DP_ONLY_RULES if dp_only_active() else RULES
+    out = []
+    for name in logical:
+        if name is None:
+            out.append(None)
+            continue
+        names = (name,) if isinstance(name, str) else name
+        phys: list = []
+        for n in names:
+            for ax in rules.get(n, ()):  # map through the rule table
+                if ax in mesh.axis_names and ax not in phys:
+                    phys.append(ax)
+        if not phys:
+            out.append(None)
+        elif len(phys) == 1:
+            out.append(phys[0])
+        else:
+            out.append(tuple(phys))
+    return P(*out)
+
+
+def named(mesh: Mesh, *logical) -> NamedSharding:
+    return NamedSharding(mesh, resolve(mesh, *logical))
+
+
+def constrain(x, mesh: Optional[Mesh], *logical):
+    """with_sharding_constraint via logical names.  mesh=None (local mode —
+    inside a pure-DP shard_map region) is a no-op."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, named(mesh, *logical))
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

@@ -1,0 +1,80 @@
+"""Roofline extraction: structural HLO parsing (loop multipliers, dot
+flops, collective wire formulas) on a hand-written module + spec rules."""
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis, hlo_structural
+
+HLO = """
+HloModule test
+
+%wide.body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %a = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %w = f32[128,128]{1,0} constant({...})
+  %d = f32[8,128]{1,0} dot(%a, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[8,128]{1,0} all-reduce(%d), replica_groups=[16,16]<=[256], to_apply=%sum
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8,128]) tuple(%i, %ag)
+}
+
+%cond (p: (s32[], f32[8,128])) -> pred[] {
+  %p = (s32[], f32[8,128]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (x: f32[8,128]) -> f32[8,128] {
+  %x = f32[8,128]{1,0} parameter(0)
+  %g = f32[128,128]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}
+  %c = s32[] constant(0)
+  %tup = (s32[], f32[8,128]) tuple(%c, %x)
+  %wh = (s32[], f32[8,128]) while(%tup), condition=%cond, body=%wide.body, backend_config={"known_trip_count":{"n":"12"},"known_init_step":{"init":"0","step":"1"}}
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_loop_multiplier_applied():
+    costs = hlo_structural.analyze_text(HLO)
+    # dot: 2*8*128*128 flops, executed 12 times
+    assert costs.flops == pytest.approx(12 * 2 * 8 * 128 * 128, rel=0.01)
+    # all-reduce in the body: 12x; all-gather in entry: 1x
+    assert costs.collective_counts["all-reduce"] == pytest.approx(12)
+    assert costs.collective_counts["all-gather"] == pytest.approx(1)
+
+
+def test_wire_formulas():
+    costs = hlo_structural.analyze_text(HLO)
+    ar_bytes = 8 * 128 * 4
+    assert costs.wire_bytes["all-reduce"] == pytest.approx(
+        12 * 2 * ar_bytes * 15 / 16)
+    ag_bytes = 128 * 128 * 4
+    assert costs.wire_bytes["all-gather"] == pytest.approx(
+        ag_bytes * 15 / 16)
+
+
+def test_roofline_terms_and_dominant():
+    r = hlo_analysis.Roofline(
+        flops_per_device=197e12, bytes_per_device=819e9 * 2,
+        wire_bytes_per_device=50e9 * 0.5, collectives={}, collective_counts={},
+        arg_bytes=0, temp_bytes=0, output_bytes=0)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(2.0)
+    assert r.collective_s == pytest.approx(0.5)
+    assert r.dominant == "memory"
+    assert r.bound_s == pytest.approx(2.0)
+
+
+def test_divisible_spec_filter(mesh):
+    from jax.sharding import PartitionSpec as P
+    from repro.runtime.params import _divisible
+    # mesh is 1x1: everything divides
+    assert tuple(_divisible(P("data", "model"), (7, 5), mesh)) == \
+        ("data", "model")
+
+
+def test_tuple_shape_halving():
+    line = "(f32[8,128], f32[8,128]) all-gather-start(%x), replica_groups=[2,8]<=[16]"
+    st = hlo_analysis.parse_collectives("  %a = " + line)
+    # tuple counts once (operand+result halved)
+    assert st.result_bytes["all-gather"] == 8 * 128 * 4

@@ -1,0 +1,61 @@
+"""Per-kernel Pallas (interpret mode) vs pure-jnp oracle, swept over shapes
+and dtypes (task requirement c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.lsh_hash import lsh_hash_pallas
+from repro.kernels.residual_apply import residual_apply_pallas
+from repro.kernels.segment_centroid import segment_centroid_pallas
+
+SHAPES_TH = [(64, 128), (200, 256), (128, 512), (37, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("t,h", SHAPES_TH)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("L,dr", [(1, 32), (4, 64)])
+def test_lsh_hash_matches_ref(t, h, dtype, L, dr, rng):
+    x = jax.random.normal(rng, (t, h), jnp.float32).astype(dtype)
+    rot = jax.random.normal(jax.random.fold_in(rng, 1), (L, h, dr),
+                            jnp.float32).astype(dtype)
+    got = lsh_hash_pallas(x, rot, interpret=True)
+    want = ref.lsh_hash_ref(x, rot)
+    assert got.shape == (t, L)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("g,c,h,s", [(1, 64, 128, 8), (4, 200, 128, 16),
+                                     (2, 128, 256, 32)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_segment_centroid_matches_ref(g, c, h, s, dtype, rng):
+    slots = jax.random.randint(rng, (g, c), 0, s)
+    x = jax.random.normal(rng, (g, c, h), jnp.float32).astype(dtype)
+    got_c, got_n = segment_centroid_pallas(slots, x, num_slots=s,
+                                           interpret=True)
+    want_c, want_n = ref.segment_centroid_ref(slots, x, s)
+    np.testing.assert_allclose(np.asarray(got_n), np.asarray(want_n))
+    np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c),
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("g,c,h,s", [(1, 64, 128, 8), (4, 200, 128, 16)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_residual_apply_matches_ref(g, c, h, s, dtype, rng):
+    slots = jax.random.randint(rng, (g, c), 0, s)
+    eout = jax.random.normal(rng, (g, s, h), jnp.float32).astype(dtype)
+    resid = jax.random.normal(jax.random.fold_in(rng, 1), (g, c, h),
+                              jnp.float32).astype(dtype)
+    got = residual_apply_pallas(slots, eout, resid, interpret=True)
+    want = ref.residual_apply_ref(slots, eout, resid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_lsh_hash_vertex_range(rng):
+    x = jax.random.normal(rng, (128, 128), jnp.float32)
+    rot = jax.random.normal(rng, (2, 128, 32), jnp.float32)
+    ids = lsh_hash_pallas(x, rot, interpret=True)
+    assert int(ids.min()) >= 0 and int(ids.max()) < 64  # 2 * Dr

@@ -1,0 +1,110 @@
+"""Property-based tests of the paper's core invariants (hypothesis).
+
+Key invariants:
+ * cross-polytope hashing is scale-invariant (argmax |Rx| unchanged under
+   positive scaling) and deterministic;
+ * nearby points collide more often than far points (locality);
+ * compress→decompress with an IDENTITY expert reconstructs tokens EXACTLY
+   (residual compensation: y = centroid + (x - centroid) = x), regardless
+   of clustering quality — the paper's Eq. 4/5 fixed point;
+ * without error compensation, reconstruction equals the centroid.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clustering
+from repro.core.hashing import cross_polytope_hash, make_rotations, spherical_hash
+
+ROT = make_rotations(jax.random.PRNGKey(7), 4, 64, 32, jnp.float32)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
+def test_cross_polytope_scale_invariant(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16, 64))
+    a = cross_polytope_hash(x, ROT)
+    b = cross_polytope_hash(x * scale, ROT)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 2**31 - 1))
+def test_locality(seed):
+    """Small perturbations collide more often than random pairs."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (256, 64))
+    near = x + 0.01 * jax.random.normal(jax.random.fold_in(key, 1), x.shape)
+    far = jax.random.normal(jax.random.fold_in(key, 2), x.shape)
+    hx = np.asarray(cross_polytope_hash(x, ROT))
+    near_rate = (np.asarray(cross_polytope_hash(near, ROT)) == hx).mean()
+    far_rate = (np.asarray(cross_polytope_hash(far, ROT)) == hx).mean()
+    assert near_rate > far_rate
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 32),
+       st.sampled_from(["cross_polytope", "spherical"]))
+def test_identity_expert_exact_reconstruction(seed, slots, hash_type):
+    """E = identity => decompress(compress(x)) == x exactly (Eq. 4/5)."""
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.normal(key, (2, 24, 64))
+    valid = jnp.ones((2, 24), bool)
+    comp = clustering.compress(tokens, valid, ROT, slots, hash_type)
+    recon = clustering.decompress(comp.centroids.astype(jnp.float32), comp)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(tokens),
+                               atol=1e-4)
+
+
+def test_no_compensation_returns_centroids():
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.normal(key, (1, 16, 64))
+    valid = jnp.ones((1, 16), bool)
+    comp = clustering.compress(tokens, valid, ROT, 4, "cross_polytope",
+                               error_compensation=False)
+    recon = clustering.decompress(comp.centroids.astype(jnp.float32), comp)
+    want = jnp.take_along_axis(comp.centroids.astype(jnp.float32),
+                               comp.slots[..., None], axis=1)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(want), atol=1e-4)
+
+
+def test_invalid_tokens_excluded_from_centroids():
+    """Unoccupied capacity slots must not pollute cluster means."""
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.normal(key, (1, 16, 64))
+    tokens = tokens.at[0, 8:].set(0.0)          # zero-filled buffer tail
+    valid = jnp.arange(16)[None, :] < 8
+    comp = clustering.compress(tokens, valid, ROT, 8, "cross_polytope")
+    occupied = np.asarray(comp.counts[0]) > 0
+    # every occupied centroid is a mean of REAL tokens only: check norms
+    cents = np.asarray(comp.centroids[0])[occupied]
+    assert (np.linalg.norm(cents, axis=-1) > 1e-3).all()
+    assert int(comp.counts.sum()) == 8          # only valid tokens counted
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 2**31 - 1))
+def test_permutation_equivariance(seed):
+    """Permuting tokens permutes reconstructions identically."""
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.normal(key, (1, 24, 64))
+    valid = jnp.ones((1, 24), bool)
+    perm = jax.random.permutation(jax.random.fold_in(key, 3), 24)
+    c1 = clustering.compress(tokens, valid, ROT, 8, "cross_polytope")
+    r1 = clustering.decompress(c1.centroids.astype(jnp.float32), c1)
+    c2 = clustering.compress(tokens[:, perm], valid, ROT, 8, "cross_polytope")
+    r2 = clustering.decompress(c2.centroids.astype(jnp.float32), c2)
+    np.testing.assert_allclose(np.asarray(r1[:, perm]), np.asarray(r2),
+                               atol=1e-4)
+
+
+def test_spherical_vs_cp_bucket_counts():
+    """CP with L hashes and Dr dims has a much larger code space than SP
+    with L hyperplanes — sanity check both produce multiple buckets."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (512, 64))
+    cp = np.asarray(cross_polytope_hash(x, ROT))
+    sp = np.asarray(spherical_hash(x, ROT))
+    assert len(np.unique(cp)) > len(np.unique(sp)) / 4
+    assert len(np.unique(cp)) > 8

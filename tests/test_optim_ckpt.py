@@ -1,0 +1,172 @@
+"""Optimizer (incl. int8 moments, NaN-skip), checkpoint roundtrip/restart,
+schedule, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (CheckpointManager, committed_steps,
+                                         load_checkpoint, save_checkpoint)
+from repro.configs.base import OptimizerConfig
+from repro.optim.adam import _dequant, _quant, adamw_init, adamw_update
+from repro.optim.grad_compress import compressed_psum, init_error_state
+from repro.optim.schedule import warmup_cosine
+
+
+def _params(rng):
+    k1, k2 = jax.random.split(rng)
+    return {"w": jax.random.normal(k1, (8, 64), jnp.float32),
+            "b": jax.random.normal(k2, (64,), jnp.float32),
+            "placement": jnp.arange(4, dtype=jnp.int32)}
+
+
+def _grads(params, rng):
+    g = jax.tree.map(lambda p: jax.random.normal(rng, p.shape)
+                     if jnp.issubdtype(p.dtype, jnp.floating) else
+                     np.zeros((), jax.dtypes.float0), params)
+    return g
+
+
+def test_quant_roundtrip(rng):
+    x = jax.random.normal(rng, (16, 300)) * 3.0
+    d = _quant(x)
+    y = _dequant(d, x.shape)
+    assert y.shape == x.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=0.05)
+
+
+@pytest.mark.parametrize("moment_dtype", ["float32", "int8"])
+def test_adamw_descends(rng, moment_dtype):
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                          moment_dtype=moment_dtype, weight_decay=0.0)
+    params = _params(rng)
+    state = adamw_init(params, cfg)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    p = params
+    l0 = float(loss(p))
+    for i in range(5):
+        g = jax.grad(loss, allow_int=True)(p)
+        p, state = adamw_update(p, g, state, cfg, jnp.asarray(0.1))
+    assert float(loss(p)) < l0
+    assert int(state.step) == 5
+    np.testing.assert_array_equal(np.asarray(p["placement"]),
+                                  np.arange(4))  # int param untouched
+
+
+def test_nonfinite_loss_skips_update(rng):
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=100)
+    params = _params(rng)
+    state = adamw_init(params, cfg)
+    g = _grads(params, rng)
+    p2, st2 = adamw_update(params, g, state, cfg, jnp.asarray(0.1),
+                           skip=jnp.asarray(True))
+    np.testing.assert_allclose(np.asarray(p2["w"]), np.asarray(params["w"]))
+    assert int(st2.grad_skips) == 1
+
+
+def test_nan_grads_auto_skipped(rng):
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=100)
+    params = _params(rng)
+    state = adamw_init(params, cfg)
+    g = _grads(params, rng)
+    g = dict(g, w=g["w"].at[0, 0].set(jnp.nan))
+    p2, st2 = adamw_update(params, g, state, cfg, jnp.asarray(0.1))
+    np.testing.assert_allclose(np.asarray(p2["w"]), np.asarray(params["w"]))
+    assert int(st2.grad_skips) == 1
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(jnp.asarray(s), 1.0, 10, 100))
+           for s in range(0, 100, 10)]
+    assert lrs[0] < lrs[1]               # warming up
+    assert lrs[-1] < lrs[2]              # decayed
+    assert all(l >= 0.099 for l in lrs[1:])
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    tree = {"a": jax.random.normal(rng, (4, 8)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32)},
+            "none_leaf": None}
+    save_checkpoint(str(tmp_path), 7, tree, extra={"foo": 1})
+    restored, step, extra = load_checkpoint(str(tmp_path), tree)
+    assert step == 7 and extra == {"foo": 1}
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(restored["nested"]["b"]),
+                                  np.arange(10))
+    assert restored["none_leaf"] is None
+
+
+def test_checkpoint_manager_gc_and_commit(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.ones((4,))}
+    for s in (1, 2, 3):
+        mgr.save_async(s, tree)
+    mgr.wait()
+    mgr._gc()
+    assert committed_steps(str(tmp_path)) == [2, 3]
+    assert mgr.latest_step() == 3
+    # uncommitted (no COMMIT marker) dirs are ignored
+    os.makedirs(tmp_path / "step_9")
+    assert committed_steps(str(tmp_path)) == [2, 3]
+
+
+def test_checkpoint_restart_bit_exact(tmp_path, rng, mesh):
+    """Train 4 steps; checkpoint at 2; restart from 2 and re-train: states
+    at step 4 must match bit-exactly (data is (step, shard)-keyed)."""
+    from repro.configs.registry import get_smoke_config
+    from repro.data.synthetic import SyntheticLMDataset
+    from repro.runtime.step import init_train_state, make_train_step
+    cfg = get_smoke_config("smollm-360m")
+    opt = OptimizerConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    ds = SyntheticLMDataset(cfg.vocab_size, 16, 2)
+    with jax.set_mesh(mesh):
+        step_fn = jax.jit(make_train_step(cfg, opt, mesh))
+        state = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh)
+        for s in range(4):
+            if s == 2:
+                save_checkpoint(str(tmp_path), s, state)
+            state, _ = step_fn(state, ds.batch_at(s))
+        final_a = jax.tree.leaves(state.params)[0]
+
+        state_b, step0, _ = load_checkpoint(str(tmp_path),
+                                            init_train_state(
+                                                jax.random.PRNGKey(0), cfg,
+                                                opt, mesh))
+        from repro.runtime.step import TrainState
+        state_b = TrainState(*state_b)
+        for s in range(step0, 4):
+            state_b, _ = step_fn(state_b, ds.batch_at(s))
+        final_b = jax.tree.leaves(state_b.params)[0]
+    np.testing.assert_array_equal(np.asarray(final_a), np.asarray(final_b))
+
+
+def test_grad_compression_error_feedback(rng, mesh):
+    """int8 psum with error feedback: compression error telescopes — the
+    mean over steps converges to the true mean."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    g_true = {"w": jax.random.normal(rng, (8, 8))}
+    err = init_error_state(g_true)
+
+    def one_step(g, e):
+        def inner(g, e):
+            synced, e2 = compressed_psum({"w": g}, {"w": e}, ("data",))
+            return synced["w"], e2["w"]
+        return shard_map(inner, mesh=mesh,
+                         in_specs=(P(None, None), P(None, None)),
+                         out_specs=(P(None, None), P(None, None)))(g, e)
+
+    with jax.set_mesh(mesh):
+        acc = jnp.zeros_like(g_true["w"])
+        e = err["w"]
+        for _ in range(8):
+            s, e = one_step(g_true["w"], e)
+            acc = acc + s
+    np.testing.assert_allclose(np.asarray(acc / 8), np.asarray(g_true["w"]),
+                               atol=0.02)

@@ -1,0 +1,128 @@
+"""Fault-tolerance runtime: watchdog, straggler monitor, expert rebalancer,
+data determinism, prefetch pipeline, sharding rules."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import PrefetchIterator
+from repro.data.synthetic import SyntheticLMDataset
+from repro.runtime.fault import ExpertRebalancer, StepWatchdog, StragglerMonitor
+from repro.runtime.sharding import dp_axes, resolve
+
+
+def test_watchdog_fires_and_disarms():
+    fired = []
+    wd = StepWatchdog(0.2, on_timeout=lambda: fired.append(1))
+    wd.arm()
+    time.sleep(0.9)
+    assert fired
+    wd.stop()
+    fired2 = []
+    wd2 = StepWatchdog(0.2, on_timeout=lambda: fired2.append(1))
+    wd2.arm()
+    wd2.disarm()
+    time.sleep(0.9)
+    assert not fired2
+    wd2.stop()
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=2.0)
+    for s in range(10):
+        assert not mon.record(s, 1.0)
+    assert mon.record(10, 5.0)
+    assert mon.flagged == [10]
+
+
+def test_expert_rebalancer_flattens_load():
+    reb = ExpertRebalancer(num_experts=8, num_ranks=4, ema=0.0,
+                           imbalance_trigger=1.2)
+    load = np.array([100, 100, 1, 1, 1, 1, 1, 1], float)  # experts 0,1 hot
+    reb.record(load)
+    placement = np.arange(8, dtype=np.int32)   # hot pair BOTH on rank 0
+    before = reb.imbalance(placement)
+    new = reb.propose(placement)
+    assert new is not None
+    after = reb.imbalance(new)
+    assert after < before
+    assert sorted(new.tolist()) == list(range(8))  # valid permutation
+
+
+def test_rebalancer_no_proposal_when_balanced():
+    reb = ExpertRebalancer(8, 4, ema=0.0, imbalance_trigger=1.5)
+    reb.record(np.ones(8))
+    assert reb.propose(np.arange(8, dtype=np.int32)) is None
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 1000))
+def test_data_deterministic_per_step(step):
+    ds1 = SyntheticLMDataset(1000, 32, 4, seed=3)
+    ds2 = SyntheticLMDataset(1000, 32, 4, seed=3)
+    b1, b2 = ds1.batch_at(step), ds2.batch_at(step)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_data_shards_disjoint():
+    a = SyntheticLMDataset(1000, 32, 8, num_shards=2, shard=0).batch_at(5)
+    b = SyntheticLMDataset(1000, 32, 8, num_shards=2, shard=1).batch_at(5)
+    assert a["tokens"].shape == (4, 32)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_data_is_zipfian():
+    ds = SyntheticLMDataset(5000, 256, 8, seed=1)
+    toks = np.concatenate([ds.batch_at(i)["tokens"].ravel()
+                           for i in range(5)])
+    counts = np.bincount(toks, minlength=5000)
+    top = counts.argsort()[::-1]
+    # head token much more frequent than the tail (Zipf)
+    assert counts[top[0]] > 20 * max(1, counts[top[2000]])
+
+
+def test_prefetch_iterator():
+    it = PrefetchIterator(iter(range(10)), depth=2,
+                          place=lambda x: x * 2)
+    got = [next(it) for _ in range(10)]
+    assert got == [x * 2 for x in range(10)]
+    it.close()
+
+
+def test_prefetch_propagates_errors():
+    def gen():
+        yield 1
+        raise RuntimeError("boom")
+    it = PrefetchIterator(gen(), depth=1)
+    assert next(it) == 1
+    with pytest.raises(RuntimeError):
+        next(it)
+        next(it)
+
+
+def test_sharding_rules(mesh):
+    assert dp_axes(mesh) == ("data",)
+    spec = resolve(mesh, "batch", "seq", None)
+    assert spec[0] == "data" and spec[1] == "model"
+    spec = resolve(mesh, ("batch", "seq"), None)
+    assert spec[0] == ("data", "model")
+
+
+def test_placement_update_permutes_weights(mesh, rng):
+    from repro.configs.base import LSHConfig, MoEConfig
+    from repro.core.lsh_moe import apply_placement_update, lsh_moe_init
+    cfg = MoEConfig(num_experts=4, top_k=2, expert_ffn_dim=8,
+                    lsh=LSHConfig(num_hashes=2, rotation_dim=8))
+    params = lsh_moe_init(rng, 16, cfg, mesh, mlp_act="swiglu",
+                          dtype=jnp.float32)
+    old = params["placement"]
+    new_placement = jnp.array([2, 3, 0, 1], jnp.int32)
+    upd = apply_placement_update(params, new_placement, old)
+    # logical expert 0's weights moved from slot 0 to slot 2
+    np.testing.assert_allclose(np.asarray(upd["w_up"][2]),
+                               np.asarray(params["w_up"][0]))
+    np.testing.assert_array_equal(np.asarray(upd["placement"]),
+                                  np.asarray(new_placement))
