@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro.compat import set_mesh
+
 from repro.configs.base import (ATTN, DENSE, MOE, LSHConfig, ModelConfig,
                                 MoEConfig, OptimizerConfig)
 from repro.data.synthetic import SyntheticLMDataset
@@ -24,16 +26,19 @@ def bench_mesh() -> Mesh:
 
 def tiny_moe_config(*, lsh: bool = True, num_hashes: int = 6,
                     rate: float = 0.2, hash_type: str = "cross_polytope",
-                    compensation: bool = True) -> ModelConfig:
+                    compensation: bool = True,
+                    kernel_backend: str = "auto") -> ModelConfig:
     """RoBERTa-MoE-shaped (scaled down): alternating dense/MoE FFN layers,
-    16 experts — the paper's §4.2 substitution pattern."""
+    16 experts — the paper's §4.2 substitution pattern.  ``kernel_backend``
+    selects the compress/decompress implementation (kernels/dispatch.py) —
+    an ablation axis for table3/fig7."""
     return ModelConfig(
         name="bench-roberta-moe", family="moe", d_model=64, num_heads=4,
         num_kv_heads=4, d_ff=128, vocab_size=512,
         layout=((ATTN, DENSE), (ATTN, MOE)), num_super_blocks=2,
         mlp_act="gelu",
         moe=MoEConfig(num_experts=8, top_k=2, expert_ffn_dim=128,
-                      capacity_factor=2.0,
+                      capacity_factor=2.0, kernel_backend=kernel_backend,
                       lsh=LSHConfig(enabled=lsh, num_hashes=num_hashes,
                                     rotation_dim=32,
                                     compression_rate=rate,
@@ -50,7 +55,7 @@ def train_curve(cfg: ModelConfig, steps: int, *, seed: int = 0,
     opt = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=steps)
     ds = SyntheticLMDataset(cfg.vocab_size, seq, batch, seed=seed)
     losses, t0 = [], time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state = init_train_state(jax.random.PRNGKey(seed), cfg, opt, mesh)
         step_fn = jax.jit(make_train_step(cfg, opt, mesh, use_lsh=use_lsh))
         for s in range(steps):

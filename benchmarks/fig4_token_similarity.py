@@ -10,6 +10,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.compat import set_mesh
+
 from benchmarks.common import tiny_moe_config, train_curve
 from repro.core.hashing import cross_polytope_hash, make_rotations
 from repro.data.synthetic import SyntheticLMDataset
@@ -24,7 +26,7 @@ def run(out_rows, steps: int = 30):
     params, mesh = res["state"].params, res["mesh"]
     ds = SyntheticLMDataset(cfg.vocab_size, 64, 8, seed=9)
     batch = ds.batch_at(0)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         # capture pre-MoE activations of the first super-block
         x = _embed_inputs(params, cfg, mesh, {"tokens": jnp.asarray(
             batch["tokens"])})

@@ -1,5 +1,7 @@
-"""Paper Figure 7 ablations: hash-count sweep {2,4,6,8,10} and hash-type
-sweep (cross-polytope vs spherical) — compression rate + converged loss."""
+"""Paper Figure 7 ablations: hash-count sweep {2,4,6,8,10}, hash-type
+sweep (cross-polytope vs spherical), and kernel-backend sweep
+(reference vs pallas_interpret dispatch) — compression rate + converged
+loss per axis."""
 from __future__ import annotations
 
 import numpy as np
@@ -38,6 +40,14 @@ def run(out_rows, steps: int = 40):
         rate = _measured_rate(6, ht)
         out_rows.append((f"fig7/type_{ht}", loss * 1e6,
                          f"loss={loss:.4f},eff_rate={rate:.3f}"))
+    # kernel-backend axis: converged loss must be backend-invariant (the
+    # dispatch registry guarantees numerics; this catches drift end to end)
+    for backend in ("reference", "pallas_interpret"):
+        res = train_curve(tiny_moe_config(lsh=True, kernel_backend=backend),
+                          steps)
+        loss = float(np.mean(res["losses"][-8:]))
+        out_rows.append((f"fig7/backend_{backend}", loss * 1e6,
+                         f"loss={loss:.4f}"))
     return out_rows
 
 

@@ -10,6 +10,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.compat import set_mesh
+
 from benchmarks.common import bench_mesh, tiny_moe_config, train_curve
 from repro.data.synthetic import SyntheticLMDataset
 from repro.models import model as model_lib
@@ -18,7 +20,7 @@ from repro.models import model as model_lib
 def _accuracy(cfg, params, mesh, seed=123, n=4):
     ds = SyntheticLMDataset(cfg.vocab_size, 64, 8, seed=seed)
     hits = tot = 0
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         fwd = jax.jit(lambda p, b: model_lib.forward(p, cfg, mesh, b)[0])
         for i in range(n):
             b = ds.batch_at(i)

@@ -4,11 +4,14 @@ Measured: (a) achieved wire-compression rate of the LSH layer on real
 routed activations (occupied slots / tokens — the paper reports 11.7%);
 (b) relative step throughput of the tiny model with/without LSH on this
 host (CPU wall clock; directional only); (c) projected v5e throughput gain
-from the roofline terms (collective term scaled by the configured rate)."""
+from the roofline terms (collective term scaled by the configured rate);
+(d) kernel-backend ablation — compress/decompress wall clock and parity
+per dispatch backend (reference vs pallas_interpret; pallas_tpu on TPU)."""
 from __future__ import annotations
 
 import json
 import os
+import time
 
 import numpy as np
 
@@ -18,6 +21,7 @@ import jax.numpy as jnp
 from benchmarks.common import bench_mesh, tiny_moe_config, train_curve
 from repro.core import clustering
 from repro.core.hashing import make_rotations
+from repro.kernels import dispatch
 
 
 def run(out_rows, steps: int = 20):
@@ -40,6 +44,33 @@ def run(out_rows, steps: int = 20):
     out_rows.append(("table3/cpu_step_ratio", ratio * 1e6,
                      f"lsh_vs_base_wall={ratio:.2f} (CPU; LSH adds compute, "
                      "saves comm — wins only on real interconnects)"))
+    # (d) kernel-backend ablation on the compress/decompress hot path
+    backends = ["reference", "pallas_interpret"]
+    if jax.default_backend() == "tpu":
+        backends.append("pallas_tpu")
+    big = jax.random.normal(jax.random.fold_in(key, 3), (8, 256, 128))
+    bvalid = jnp.ones((8, 256), bool)
+    brot = make_rotations(jax.random.fold_in(key, 4), 6, 128, 64,
+                          jnp.float32)
+    outs = {}
+    for b in backends:
+        def run_one(t, b=b):
+            comp = clustering.compress(t, bvalid, brot, 64,
+                                       "cross_polytope", backend=b)
+            return clustering.decompress(
+                comp.centroids.astype(jnp.float32), comp, backend=b)
+        fn = jax.jit(run_one)
+        outs[b] = np.asarray(fn(big))              # compile + correctness
+        t0 = time.time()
+        for _ in range(5):
+            fn(big).block_until_ready()
+        dt = (time.time() - t0) / 5
+        out_rows.append((f"table3/backend_{b}_roundtrip_ms", dt * 1e9,
+                         f"compress+decompress={dt * 1e3:.2f}ms"))
+    drift = max(float(np.abs(outs[b] - outs["reference"]).max())
+                for b in backends)
+    out_rows.append(("table3/backend_max_drift", drift * 1e6,
+                     f"max|backend - reference|={drift:.2e}"))
     # (c) projected v5e speedup from dry-run roofline
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                        "dryrun.json")

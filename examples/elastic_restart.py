@@ -15,6 +15,8 @@ import numpy as np
 import jax
 from jax.sharding import Mesh
 
+from repro.compat import set_mesh
+
 from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs.base import OptimizerConfig
 from repro.configs.registry import get_smoke_config
@@ -31,7 +33,7 @@ def main():
 
     mesh_a = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
                   ("data", "model"))
-    with jax.set_mesh(mesh_a):
+    with set_mesh(mesh_a):
         state = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh_a)
         step = jax.jit(make_train_step(cfg, opt, mesh_a))
         for s in range(3):
@@ -43,7 +45,7 @@ def main():
     # "new cluster shape": rebuild mesh, restore with ITS shardings
     mesh_b = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
                   ("data", "model"))
-    with jax.set_mesh(mesh_b):
+    with set_mesh(mesh_b):
         template = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh_b)
         shardings = TrainState(
             param_shardings(template.params, mesh_b),

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro.compat import set_mesh
+
 from repro.configs.base import (ATTN, DENSE, MOE, LSHConfig, ModelConfig,
                                 MoEConfig, OptimizerConfig)
 from repro.core import clustering
@@ -33,7 +35,7 @@ def main():
     opt = OptimizerConfig(lr=1e-3, warmup_steps=5, total_steps=50)
     ds = SyntheticLMDataset(cfg.vocab_size, 64, 8)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh)
         for use_lsh, tag in ((False, "baseline (uncompressed a2a)"),
                              (True, "LSH-MoE  (compressed a2a)")):

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro.compat import set_mesh
+
 from repro.configs.registry import get_smoke_config
 from repro.models import model as model_lib
 
@@ -29,7 +31,7 @@ def main():
     cfg = get_smoke_config(args.arch)
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
     max_len = args.prompt_len + args.gen
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = model_lib.init_params(jax.random.PRNGKey(0), cfg, mesh)
         decode = jax.jit(
             lambda p, s, t: model_lib.decode_step(p, cfg, mesh, s, t))

@@ -27,6 +27,7 @@ def main():
     from repro.configs.base import (ATTN, DENSE, MOE, LSHConfig, ModelConfig,
                                     MoEConfig, OptimizerConfig)
     from repro.checkpoint.checkpoint import CheckpointManager, load_checkpoint
+    from repro.compat import set_mesh
     from repro.data.synthetic import SyntheticLMDataset
     from repro.runtime.fault import StepWatchdog, StragglerMonitor
     from repro.runtime.step import (TrainState, init_train_state,
@@ -52,7 +53,7 @@ def main():
     watchdog = StepWatchdog(600.0)
     mon = StragglerMonitor()
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh)
         start = 0
         if mgr.latest_step() is not None:

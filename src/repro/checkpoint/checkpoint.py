@@ -25,7 +25,30 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:                                   # gated dep: zstd when available ...
+    import zstandard
+except ImportError:                    # ... stdlib zlib otherwise
+    zstandard = None
+import zlib
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 3)
+
+
+def _decompress(buf: bytes) -> bytes:
+    if buf[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but zstandard is not "
+                "installed on this host")
+        return zstandard.ZstdDecompressor().decompress(buf)
+    return zlib.decompress(buf)
 
 _KEY_SEP = "/"
 
@@ -54,6 +77,15 @@ def save_checkpoint(directory: str, step: int, tree, *,
     os.makedirs(directory, exist_ok=True)
     tmp = os.path.join(directory, f"step_{step}.tmp")
     final = os.path.join(directory, f"step_{step}")
+    if os.path.exists(os.path.join(final, "COMMIT")):
+        # idempotent: this step is already committed (e.g. the periodic
+        # save and the end-of-run save coincide) — renaming over it would
+        # fail with ENOTEMPTY and the data is already durable
+        return final
+    if os.path.exists(final):
+        # crash window leftover: renamed but never committed — restore
+        # ignores it, and it would ENOTEMPTY the rename below forever
+        shutil.rmtree(final)
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
@@ -70,8 +102,9 @@ def save_checkpoint(directory: str, step: int, tree, *,
         payload[key] = (arr.tobytes(), str(arr.dtype), list(arr.shape))
     proc = jax.process_index()
     raw = msgpack.packb(payload, use_bin_type=True)
-    with open(os.path.join(tmp, f"shard_{proc}.msgpack.zst"), "wb") as f:
-        f.write(zstandard.ZstdCompressor(level=3).compress(raw))
+    ext = "zst" if zstandard is not None else "zlib"
+    with open(os.path.join(tmp, f"shard_{proc}.msgpack.{ext}"), "wb") as f:
+        f.write(_compress(raw))
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     os.rename(tmp, final)
@@ -106,7 +139,7 @@ def load_checkpoint(directory: str, template, *, step: Optional[int] = None,
     for name in os.listdir(path):
         if name.startswith("shard_"):
             with open(os.path.join(path, name), "rb") as f:
-                raw = zstandard.ZstdDecompressor().decompress(f.read())
+                raw = _decompress(f.read())
             payload.update(msgpack.unpackb(raw, raw=False))
     flat_tpl = _flatten(template)
     flat_sh = _flatten(shardings) if shardings is not None else {}

@@ -45,6 +45,10 @@ class MoEConfig:
     router_aux_weight: float = 0.01     # load-balance loss weight
     router_z_weight: float = 1e-3
     lsh: LSHConfig = field(default_factory=LSHConfig)
+    # Kernel backend for the LSH compress/decompress hot path:
+    # "auto" | "reference" | "pallas_interpret" | "pallas_tpu"
+    # (resolution order in kernels/dispatch.py; docs/kernels.md).
+    kernel_backend: str = "auto"
 
 
 @dataclass(frozen=True)

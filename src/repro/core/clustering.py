@@ -9,8 +9,13 @@ outputs via Y = E(centroid) + Δ (Eq. 4/5).  All shapes static:
   expert outputs on centroids [G, S, H]  --decompress-->  [G, C, H]
 
 G = expert groups (vectorized), C = per-group capacity, S = slots.
-Centroid accumulation is a one-hot contraction (MXU-friendly; the Pallas
-`segment_centroid` kernel implements the same contract on TPU).
+
+Both directions dispatch through the kernel backend registry
+(kernels/dispatch.py).  On the ``reference`` backend centroid accumulation
+is a one-hot contraction in XLA; on the Pallas backends the [G, C, S]
+one-hot intermediate never materializes — ``segment_centroid`` builds its
+mask tile-locally in VREGs and ``residual_apply`` fuses the gather with the
+compensation add.
 """
 from __future__ import annotations
 
@@ -20,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hashing import lsh_hash
+from repro.kernels import dispatch
 
 
 class Compressed(NamedTuple):
@@ -30,47 +36,59 @@ class Compressed(NamedTuple):
 
 
 def assign_slots(tokens: jax.Array, rotations: jax.Array, num_slots: int,
-                 hash_type: str) -> jax.Array:
+                 hash_type: str, backend: str = dispatch.AUTO) -> jax.Array:
     """Bucket ids folded into [0, num_slots)."""
-    ids = lsh_hash(tokens, rotations, hash_type)
+    ids = lsh_hash(tokens, rotations, hash_type, backend=backend)
     return jnp.abs(ids) % jnp.int32(num_slots)
 
 
 def compress(tokens: jax.Array, valid: jax.Array, rotations: jax.Array,
              num_slots: int, hash_type: str = "cross_polytope",
-             error_compensation: bool = True) -> Compressed:
+             error_compensation: bool = True,
+             backend: str = dispatch.AUTO) -> Compressed:
     """tokens: [G, C, H]; valid: [G, C] bool (occupied buffer slots)."""
     G, C, H = tokens.shape
-    slots = assign_slots(tokens, rotations, num_slots, hash_type)
+    backend = dispatch.resolve_backend(backend)
+    slots = assign_slots(tokens, rotations, num_slots, hash_type, backend)
     slots = jnp.where(valid, slots, num_slots)            # invalid -> overflow bin
-    onehot = jax.nn.one_hot(slots, num_slots, dtype=jnp.float32)  # [G,C,S]
-    counts = onehot.sum(axis=1)                           # [G,S]
-    sums = jnp.einsum("gcs,gch->gsh", onehot, tokens.astype(jnp.float32))
-    centroids = (sums / jnp.maximum(counts, 1.0)[..., None]).astype(tokens.dtype)
-    gathered = jnp.einsum("gcs,gsh->gch", onehot, centroids.astype(jnp.float32))
+
+    # Uniform op contract (kernels/dispatch.py): the overflow bin
+    # (slot == num_slots) contributes to no centroid and gathers zero, so
+    # invalid tokens drop out on every backend.
+    cent_f32, counts = dispatch.segment_centroid(
+        slots, tokens, num_slots, backend=backend)
+    centroids = cent_f32.astype(tokens.dtype)
     if error_compensation:
+        gathered = dispatch.residual_apply(
+            slots, centroids.astype(jnp.float32),
+            jnp.zeros((G, C, H), jnp.float32), backend=backend)
         residuals = tokens.astype(jnp.float32) - gathered
     else:
-        residuals = jnp.zeros_like(gathered)
+        residuals = jnp.zeros((G, C, H), jnp.float32)
     slots = jnp.minimum(slots, num_slots - 1)             # clamp overflow bin
-    return Compressed(centroids, residuals.astype(tokens.dtype), slots, counts)
+    return Compressed(centroids, residuals.astype(tokens.dtype), slots,
+                      counts)
 
 
-def decompress(expert_out: jax.Array, comp: Compressed) -> jax.Array:
+def decompress(expert_out: jax.Array, comp: Compressed,
+               backend: str = dispatch.AUTO) -> jax.Array:
     """expert_out: [G, S, H] = E(centroids).  Returns [G, C, H] ≈ E(tokens).
 
     Paper Eq. 5: Y = E(centroid_of(token)) + residual(token)."""
-    gathered = jnp.take_along_axis(
-        expert_out, comp.slots[..., None].astype(jnp.int32), axis=1)
-    return gathered + comp.residuals.astype(expert_out.dtype)
+    out = dispatch.residual_apply(comp.slots, expert_out,
+                                  comp.residuals.astype(jnp.float32),
+                                  backend=backend)
+    return out.astype(expert_out.dtype)
 
 
 def compression_stats(comp: Compressed, valid: jax.Array) -> dict:
     """Measured wire compression: occupied slots / valid tokens."""
+    num_slots = comp.centroids.shape[1]
+    capacity = comp.residuals.shape[1]
     occupied = (comp.counts > 0).sum(axis=-1).astype(jnp.float32)  # [G]
     tokens = jnp.maximum(valid.sum(axis=-1).astype(jnp.float32), 1.0)
     return {
-        "configured_rate": comp.centroids.shape[1] / max(1, comp.residuals.shape[1]),
+        "configured_rate": float(num_slots) / float(max(1, capacity)),
         "occupied_slots": occupied.mean(),
         "effective_rate": (occupied / tokens).mean(),
     }

@@ -29,18 +29,22 @@ def make_rotations(key, num_hashes: int, d_model: int, rotation_dim: int,
     return r.astype(dtype)
 
 
-def cross_polytope_hash(x: jax.Array, rotations: jax.Array) -> jax.Array:
+def cross_polytope_hash(x: jax.Array, rotations: jax.Array,
+                        backend: str = "reference") -> jax.Array:
     """x: [..., H]; rotations: [L, H, Dr].  Returns int32 bucket ids [...].
 
     Per hash l: rotate, take argmax of |Rx| over Dr, encode the sign in the
-    low bit => vertex index in [0, 2*Dr).  Fold the L indices.
+    low bit => vertex index in [0, 2*Dr).  Fold the L indices.  ``backend``
+    selects the vertex-id implementation (kernels/dispatch.py): on Pallas
+    backends the rotate+argmax is the fused ``lsh_hash`` kernel.
     """
     rot = jax.lax.stop_gradient(rotations).astype(jnp.float32)
     xf = jax.lax.stop_gradient(x).astype(jnp.float32)
-    v = jnp.einsum("...h,lhd->...ld", xf, rot)          # [..., L, Dr]
-    idx = jnp.argmax(jnp.abs(v), axis=-1)               # [..., L]
-    sign = jnp.take_along_axis(v, idx[..., None], axis=-1)[..., 0] < 0
-    vertex = (2 * idx + sign.astype(jnp.int32)).astype(jnp.int32)
+    from repro.kernels import dispatch
+    lead = xf.shape[:-1]
+    vertex = dispatch.lsh_hash(xf.reshape(-1, xf.shape[-1]), rot,
+                               backend=backend)
+    vertex = vertex.reshape(lead + (rot.shape[0],))
     return _fold(vertex)
 
 
@@ -61,9 +65,12 @@ def _fold(per_hash_ids: jax.Array) -> jax.Array:
     return out
 
 
-def lsh_hash(x: jax.Array, rotations: jax.Array, hash_type: str) -> jax.Array:
+def lsh_hash(x: jax.Array, rotations: jax.Array, hash_type: str,
+             backend: str = "reference") -> jax.Array:
     if hash_type == "cross_polytope":
-        return cross_polytope_hash(x, rotations)
+        return cross_polytope_hash(x, rotations, backend=backend)
     if hash_type == "spherical":
+        # No Pallas kernel for hyperplane hashing (a single skinny matvec:
+        # XLA already emits the right thing); every backend takes this path.
         return spherical_hash(x, rotations)
     raise ValueError(f"unknown hash_type {hash_type}")

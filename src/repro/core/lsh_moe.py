@@ -36,14 +36,19 @@ def lsh_moe_init(key, d_model: int, cfg: MoEConfig, mesh: Mesh, *,
 
 def lsh_moe_apply(params: Dict, x: jax.Array, cfg: MoEConfig, mesh: Mesh, *,
                   mlp_act: str, mode: str = "train",
-                  use_lsh: Optional[bool] = None) -> Tuple[jax.Array, Dict]:
+                  use_lsh: Optional[bool] = None,
+                  kernel_backend: Optional[str] = None
+                  ) -> Tuple[jax.Array, Dict]:
     """mode: "train" | "prefill" -> expert-parallel a2a (+LSH);
-    "decode" -> dense dispatch (tiny token counts; no compression)."""
+    "decode" -> dense dispatch (tiny token counts; no compression).
+    ``kernel_backend`` overrides cfg.kernel_backend for the compress /
+    decompress hot path (kernels/dispatch.py)."""
     if mode == "decode":
         return moe_lib.moe_dense_dispatch(x, params, cfg, mesh,
                                           mlp_act=mlp_act)
     return moe_lib.moe_expert_parallel(x, params, cfg, mesh, mlp_act=mlp_act,
-                                       use_lsh=use_lsh)
+                                       use_lsh=use_lsh,
+                                       kernel_backend=kernel_backend)
 
 
 def apply_placement_update(params: Dict, new_placement: jax.Array,
@@ -51,18 +56,12 @@ def apply_placement_update(params: Dict, new_placement: jax.Array,
     """Hot-expert rebalancing (runtime/fault.py): permute physical expert
     weights so logical expert e now lives at new_placement[e].  Cheap param
     permute applied at checkpoint boundaries."""
-    perm = jnp.zeros_like(new_placement)
-    perm = perm.at[new_placement].set(jnp.arange(new_placement.shape[0]))
     out = dict(params)
     e = new_placement.shape[0]
-    inv_old = jnp.zeros_like(old_placement).at[old_placement].set(
-        jnp.arange(e))
-    reorder = new_placement[inv_old]  # physical_new per physical_old slot
     for name in ("w_gate", "w_up", "w_down"):
         if name in out:
-            w = out[name]
-            out[name] = w.at[reorder[: e]].set(w[jnp.arange(e) % w.shape[0]][: e]) \
-                if False else _permute_rows(w, old_placement, new_placement, e)
+            out[name] = _permute_rows(out[name], old_placement,
+                                      new_placement, e)
     out["placement"] = new_placement
     return out
 

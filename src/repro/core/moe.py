@@ -26,12 +26,13 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import MoEConfig
 from repro.core import clustering
 from repro.core.gating import positions_in_expert, top_k_gating
+from repro.kernels import dispatch
 from repro.runtime.sharding import axis_size, dp_axes
 
 
@@ -57,7 +58,7 @@ def num_lsh_slots(capacity: int, rate: float) -> int:
 
 def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
                cfg: MoEConfig, mesh: Mesh, mlp_act: str, e_pad: int,
-               capacity: int, use_lsh: bool, wire_dtype):
+               capacity: int, use_lsh: bool, wire_dtype, kernel_backend):
     """Per-device body. x: [B_loc, S_loc, H]."""
     model_r = axis_size(mesh, "model")
     e_local = e_pad // model_r
@@ -82,7 +83,8 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
         slots = num_lsh_slots(capacity, cfg.lsh.compression_rate)
         comp = clustering.compress(disp, valid, rot, slots,
                                    cfg.lsh.hash_type,
-                                   cfg.lsh.error_compensation)
+                                   cfg.lsh.error_compensation,
+                                   backend=kernel_backend)
         wire, c_wire = comp.centroids, slots
     else:
         comp, wire, c_wire = None, disp, capacity
@@ -117,13 +119,14 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
     expert_out = ret.reshape(e_pad, c_wire, H).astype(jnp.float32)
 
     if use_lsh:
-        out_tok = clustering.decompress(expert_out, comp)  # [E_pad, C, H]
+        out_tok = clustering.decompress(expert_out, comp,
+                                        backend=kernel_backend)  # [E_pad,C,H]
     else:
         out_tok = expert_out
 
     # combine: gather own (expert, pos) results, weight, sum over k
     flat = out_tok[e_flat, jnp.minimum(pos, capacity - 1)]
-    flat = flat * (keep[:, None] & True).astype(flat.dtype)
+    flat = flat * keep[:, None].astype(flat.dtype)
     y = (flat.reshape(T, k, H) * gate.weights[..., None]).sum(axis=1)
 
     all_axes = tuple(mesh.axis_names)
@@ -136,12 +139,14 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
 
 def moe_expert_parallel(x: jax.Array, params: Dict, cfg: MoEConfig,
                         mesh: Mesh, *, mlp_act: str,
-                        use_lsh: Optional[bool] = None
+                        use_lsh: Optional[bool] = None,
+                        kernel_backend: Optional[str] = None
                         ) -> Tuple[jax.Array, Dict]:
     """x: [B, S, H] sharded (batch->(pod,data), seq->model).
 
     params: router_w [H,E], w_gate/w_up [E_pad,H,F], w_down [E_pad,F,H],
-    lsh_rot [L,H,Dr], placement [E].
+    lsh_rot [L,H,Dr], placement [E].  ``kernel_backend`` overrides
+    cfg.kernel_backend (resolved before tracing — a static choice).
     """
     B, S, H = x.shape
     dp = dp_axes(mesh)
@@ -152,6 +157,10 @@ def moe_expert_parallel(x: jax.Array, params: Dict, cfg: MoEConfig,
     capacity = expert_capacity(t_loc, e_pad, cfg.top_k, cfg.capacity_factor)
     use_lsh = cfg.lsh.enabled if use_lsh is None else use_lsh
     wire_dtype = jnp.dtype(cfg.lsh.wire_dtype) if use_lsh else x.dtype
+    # resolve only when a kernel can actually run: a TPU-targeted config
+    # must still trace the use_lsh=False baseline on CPU hosts
+    backend = (dispatch.resolve_backend(kernel_backend or cfg.kernel_backend)
+               if use_lsh else dispatch.REFERENCE)
 
     tok_spec = P(dp if len(dp) > 1 else (dp[0] if dp else None), "model", None)
     ew_spec = P("model", "data", None)
@@ -159,14 +168,13 @@ def moe_expert_parallel(x: jax.Array, params: Dict, cfg: MoEConfig,
 
     fn = partial(_local_moe, cfg=cfg, mesh=mesh, mlp_act=mlp_act,
                  e_pad=e_pad, capacity=capacity, use_lsh=use_lsh,
-                 wire_dtype=wire_dtype)
+                 wire_dtype=wire_dtype, kernel_backend=backend)
     y, aux, z, load = shard_map(
         fn, mesh=mesh,
         in_specs=(tok_spec, P(None, None),
                   ew_spec if "w_gate" in params else None,
                   ew_spec, ew_spec, P(None, None, None), rep),
         out_specs=(tok_spec, P(), P(), P()),
-        check_vma=False,
     )(x, params["router_w"], params.get("w_gate"), params["w_up"],
       params["w_down"], params["lsh_rot"], params["placement"])
     return y, {"aux_loss": aux, "z_loss": z, "expert_load": load}

@@ -1,0 +1,192 @@
+"""Kernel backend registry: one uniform contract per hot-path op, three
+interchangeable implementations.
+
+  reference        pure-jnp oracles (kernels/ref.py) — XLA fuses them, and
+                   they are the only fully-general path (any platform, any
+                   shape, spherical hashing, ...).
+  pallas_interpret Pallas kernels executed by the interpreter — bit-faithful
+                   to the TPU kernels, runs anywhere; used by the parity
+                   suite and for debugging Mosaic lowerings on CPU.
+  pallas_tpu       compiled Mosaic kernels (TPU only).
+
+Selection: ``resolve_backend(name)`` with name from config
+(``MoEConfig.kernel_backend``) or a call-site override.  ``"auto"`` defers
+to the ``REPRO_KERNEL_BACKEND`` env var, then platform autodetect
+(``pallas_tpu`` on TPU, ``reference`` elsewhere).  Force
+``REPRO_KERNEL_BACKEND=reference`` to take every kernel out of the picture
+when bisecting a numerics bug (see docs/kernels.md).
+
+The Pallas ops carry custom VJPs whose backwards are themselves kernel
+calls (gather ⟂ segment-sum are mutual transposes), so both training and
+inference dispatch through this registry — no [G, C, S] one-hot tensor is
+ever materialized on a Pallas backend.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Callable, Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import default_backend
+from repro.kernels import ref
+from repro.kernels.lsh_hash import lsh_hash_pallas
+from repro.kernels.residual_apply import residual_apply_pallas
+from repro.kernels.segment_centroid import segment_centroid_pallas
+
+REFERENCE = "reference"
+PALLAS_INTERPRET = "pallas_interpret"
+PALLAS_TPU = "pallas_tpu"
+AUTO = "auto"
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+OPS = ("lsh_hash", "segment_centroid", "residual_apply")
+
+
+def _float0_like(x):
+    """Zero cotangent for integer primals (slot ids)."""
+    return np.zeros(x.shape, jax.dtypes.float0)
+
+
+# --------------------------------------------------------------------------
+# Differentiable Pallas ops.  slots is an integer primal (float0 cotangent);
+# num_slots / interpret are static.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _segment_centroid_pl(slots, x, num_slots, interpret):
+    return segment_centroid_pallas(slots, x, num_slots=num_slots,
+                                   interpret=interpret)
+
+
+def _segment_centroid_fwd(slots, x, num_slots, interpret):
+    cent, counts = _segment_centroid_pl(slots, x, num_slots, interpret)
+    return (cent, counts), (slots, counts, jnp.zeros((), x.dtype))
+
+
+def _segment_centroid_bwd(num_slots, interpret, res, cts):
+    slots, counts, xproto = res
+    d_cent, _ = cts                       # counts do not depend on x
+    # centroid_s = Σ_c x_c / count_s  =>  dx_c = d_cent[slot_c] / count
+    scaled = d_cent / jnp.maximum(counts, 1.0)[..., None]
+    G, C = slots.shape
+    H = d_cent.shape[-1]
+    zeros = jnp.zeros((G, C, H), jnp.float32)
+    dx = residual_apply_pallas(slots, scaled, zeros, interpret=interpret)
+    return _float0_like(slots), dx.astype(xproto.dtype)
+
+
+_segment_centroid_pl.defvjp(_segment_centroid_fwd, _segment_centroid_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _residual_apply_pl(slots, expert_out, residual, num_slots, interpret):
+    return residual_apply_pallas(slots, expert_out, residual,
+                                 interpret=interpret)
+
+
+def _residual_apply_fwd(slots, expert_out, residual, num_slots, interpret):
+    out = _residual_apply_pl(slots, expert_out, residual, num_slots,
+                             interpret)
+    return out, (slots, jnp.zeros((), expert_out.dtype),
+                 jnp.zeros((), residual.dtype))
+
+
+def _residual_apply_bwd(num_slots, interpret, res, ct):
+    slots, eproto, rproto = res
+    # out = gather(expert_out, slots) + residual: the gather's transpose is
+    # a segment-sum over slots — the centroid kernel run on the cotangent.
+    cent, counts = segment_centroid_pallas(slots, ct, num_slots=num_slots,
+                                           interpret=interpret)
+    d_eout = cent * counts[..., None]     # undo the kernel's mean
+    return (_float0_like(slots), d_eout.astype(eproto.dtype),
+            ct.astype(rproto.dtype))
+
+
+_residual_apply_pl.defvjp(_residual_apply_fwd, _residual_apply_bwd)
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+def _pallas_ops(interpret: bool) -> Dict[str, Callable]:
+    return {
+        "lsh_hash": lambda x, rot: lsh_hash_pallas(
+            x, rot, interpret=interpret),
+        "segment_centroid": lambda slots, x, num_slots: _segment_centroid_pl(
+            slots, x, num_slots, interpret),
+        "residual_apply": lambda slots, eout, resid: _residual_apply_pl(
+            slots, eout, resid, eout.shape[1], interpret),
+    }
+
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {
+    REFERENCE: {
+        "lsh_hash": ref.lsh_hash_ref,
+        "segment_centroid": ref.segment_centroid_ref,
+        "residual_apply": ref.residual_apply_ref,
+    },
+    PALLAS_INTERPRET: _pallas_ops(interpret=True),
+    PALLAS_TPU: _pallas_ops(interpret=False),
+}
+
+
+def register_backend(name: str, ops: Dict[str, Callable]) -> None:
+    """Extension point (e.g. a future pallas_gpu / triton backend)."""
+    missing = set(OPS) - set(ops)
+    if missing:
+        raise ValueError(f"backend {name!r} missing ops {sorted(missing)}")
+    _REGISTRY[name] = dict(ops)
+
+
+def available_backends():
+    return tuple(_REGISTRY)
+
+
+def resolve_backend(name: str | None = AUTO) -> str:
+    """Config/override name -> concrete backend (trace-time resolution).
+
+    Order: explicit name > $REPRO_KERNEL_BACKEND > platform autodetect
+    (pallas_tpu on TPU, reference elsewhere)."""
+    name = name or AUTO
+    if name == AUTO:
+        name = os.environ.get(ENV_VAR, AUTO) or AUTO
+    if name == AUTO:
+        name = PALLAS_TPU if default_backend() == "tpu" else REFERENCE
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown kernel backend {name!r}; "
+                         f"available: {sorted(_REGISTRY)}")
+    if name == PALLAS_TPU and default_backend() != "tpu":
+        raise ValueError(
+            "kernel backend 'pallas_tpu' requires a TPU (platform is "
+            f"{default_backend()!r}); use 'pallas_interpret' to run "
+            "the kernel logic off-TPU")
+    return name
+
+
+# ------------------------------------------------------------ public ops --
+
+def lsh_hash(x, rotations, *, backend: str = AUTO):
+    """x: [T, H]; rotations: [L, H, Dr] -> [T, L] int32 vertex ids."""
+    return _REGISTRY[resolve_backend(backend)]["lsh_hash"](x, rotations)
+
+
+def segment_centroid(slots, x, num_slots: int, *, backend: str = AUTO):
+    """slots: [G, C] int32; x: [G, C, H] ->
+    (centroids [G, S, H] f32, counts [G, S] f32).  Out-of-range slot ids
+    (>= num_slots) contribute to nothing — the invalid-token overflow bin."""
+    return _REGISTRY[resolve_backend(backend)]["segment_centroid"](
+        slots, x, num_slots)
+
+
+def residual_apply(slots, expert_out, residual, *, backend: str = AUTO):
+    """[G, C] ids, [G, S, H] outputs, [G, C, H] residuals -> [G, C, H] f32
+    = expert_out[g, slots] + residual.  Out-of-range slot ids gather zero
+    on every backend (the invalid-token overflow bin)."""
+    return _REGISTRY[resolve_backend(backend)]["residual_apply"](
+        slots, expert_out, residual)

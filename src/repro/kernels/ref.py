@@ -26,8 +26,14 @@ def segment_centroid_ref(slots: jax.Array, x: jax.Array, num_slots: int):
 
 def residual_apply_ref(slots: jax.Array, expert_out: jax.Array,
                        residual: jax.Array) -> jax.Array:
-    """[G,C] ids, [G,S,H] outputs, [G,C,H] residuals -> [G,C,H] f32."""
+    """[G,C] ids, [G,S,H] outputs, [G,C,H] residuals -> [G,C,H] f32.
+
+    Out-of-range slot ids gather ZERO (the invalid-token overflow bin) —
+    the same contract as the Pallas kernel's iota mask."""
+    S = expert_out.shape[1]
+    in_range = (slots >= 0) & (slots < S)
     gathered = jnp.take_along_axis(
         expert_out.astype(jnp.float32),
-        slots[..., None].astype(jnp.int32), axis=1)
+        jnp.clip(slots, 0, S - 1)[..., None].astype(jnp.int32), axis=1)
+    gathered = gathered * in_range[..., None].astype(jnp.float32)
     return gathered + residual.astype(jnp.float32)

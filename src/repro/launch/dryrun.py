@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import set_mesh
+
 from repro.configs.base import (OptimizerConfig, SHAPES, active_param_count,
                                 param_count, shape_applicable)
 from repro.configs.registry import ARCH_IDS, get_config
@@ -108,7 +110,7 @@ def _lower_cell_inner(arch, shape_name, mesh, cfg, shape, *, use_lsh,
         batch_sh = _batch_shardings(cfg, shape, mesh)
         step_fn = make_train_step(cfg, opt_cfg, mesh, use_lsh=use_lsh,
                                   microbatch=cfg.train_microbatch)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
                               donate_argnums=(0,)).lower(
                 state_shapes, _batch_structs(cfg, shape))
@@ -121,7 +123,7 @@ def _lower_cell_inner(arch, shape_name, mesh, cfg, shape, *, use_lsh,
                             prules.param_specs(params_shapes, mesh))
         batch_sh = _batch_shardings(cfg, shape, mesh)
         fn = lambda p, b: model_lib.prefill(p, cfg, mesh, b)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = jax.jit(fn, in_shardings=(p_sh, batch_sh)).lower(
                 params_shapes, _batch_structs(cfg, shape))
         tokens = shape.global_batch * shape.seq_len
@@ -140,7 +142,7 @@ def _lower_cell_inner(arch, shape_name, mesh, cfg, shape, *, use_lsh,
                              is_leaf=lambda x: isinstance(x, P))
         tok_sh = _batch_shardings(cfg, shape, mesh)["tokens"]
         fn = lambda p, s, t: model_lib.decode_step(p, cfg, mesh, s, t)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = jax.jit(fn, in_shardings=(p_sh, st_sh, tok_sh),
                               donate_argnums=(1,)).lower(
                 params_shapes, state_shapes,

@@ -21,6 +21,7 @@ def main() -> int:
 
     import jax
     import jax.numpy as jnp
+    from repro.compat import set_mesh
     from repro.configs.registry import get_config, get_smoke_config
     from repro.launch.mesh import make_host_mesh
     from repro.models import model as model_lib
@@ -30,7 +31,7 @@ def main() -> int:
     B = args.batch_slots
     max_len = args.prompt_len + args.gen
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = model_lib.init_params(jax.random.PRNGKey(0), cfg, mesh)
         decode = jax.jit(lambda p, s, t: model_lib.decode_step(p, cfg, mesh,
                                                                s, t))

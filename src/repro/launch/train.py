@@ -56,6 +56,7 @@ def main() -> int:
     import jax
     import jax.numpy as jnp
     from repro.checkpoint.checkpoint import CheckpointManager, load_checkpoint
+    from repro.compat import set_mesh
     from repro.configs.base import OptimizerConfig
     from repro.configs.registry import get_config, get_smoke_config
     from repro.data.pipeline import PrefetchIterator
@@ -85,7 +86,7 @@ def main() -> int:
         rebalancer = ExpertRebalancer(cfg.moe.num_experts,
                                       mesh.shape.get("model", 1))
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh)
         start = 0
         if mgr and mgr.latest_step() is not None:

@@ -54,6 +54,13 @@ def _dequant(d: Dict, shape) -> jax.Array:
     return x[..., :shape[-1]]
 
 
+def _quant_floor(d: Dict, shape) -> jax.Array:
+    """Half a quantization step, broadcast per element: the resolution limit
+    of a stored value.  Entries smaller than this round to q=0."""
+    s = jnp.repeat(d["scale"], _BLOCK, axis=-1)[..., :shape[-1]]
+    return 0.5 * s
+
+
 def _moment_init(p, dtype: str):
     if not jnp.issubdtype(p.dtype, jnp.floating):
         return None
@@ -99,8 +106,15 @@ def adamw_update(params, grads, state: OptState, cfg: OptimizerConfig,
         gf = g.astype(jnp.float32) * scale
         mf = _dequant(m, p.shape) if cfg.moment_dtype == "int8" \
             else m.astype(jnp.float32)
-        vf = _dequant(v, p.shape) if cfg.moment_dtype == "int8" \
-            else v.astype(jnp.float32)
+        if cfg.moment_dtype == "int8":
+            # Absmax int8 flushes small v entries to zero; dividing m by eps
+            # alone then amplifies those steps ~1e6x and diverges.  Clamp the
+            # dequantized variance to its own quantization floor — below the
+            # floor the stored value carries no information anyway.
+            vf = jnp.maximum(_dequant(v, p.shape),
+                             _quant_floor(v, p.shape))
+        else:
+            vf = v.astype(jnp.float32)
         mf = cfg.b1 * mf + (1 - cfg.b1) * gf
         vf = cfg.b2 * vf + (1 - cfg.b2) * jnp.square(gf)
         upd = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)

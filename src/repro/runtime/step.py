@@ -93,8 +93,9 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, mesh: Mesh,
 
 def _make_dp_only_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
                              mesh: Mesh, *, use_lsh: Optional[bool]):
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
     all_axes = tuple(mesh.axis_names)
 
     def loss_local(params, batch):
@@ -133,8 +134,7 @@ def _make_dp_only_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
         rep = jax.tree.map(lambda _: P(), state.params)
         l, metrics, grads = shard_map(
             local_step, mesh=mesh, in_specs=(rep, bspec),
-            out_specs=(P(), P(), P()),
-            check_vma=False)(state.params, batch)
+            out_specs=(P(), P(), P()))(state.params, batch)
         lr = warmup_cosine(state.opt.step, opt_cfg.lr, opt_cfg.warmup_steps,
                            opt_cfg.total_steps)
         skip = ~jnp.isfinite(l)

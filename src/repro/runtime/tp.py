@@ -28,8 +28,9 @@ from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.runtime.sharding import constrain, dp_axes
 
@@ -78,7 +79,7 @@ def sp_gather(x: jax.Array, mesh: Mesh) -> jax.Array:
         return all_gather_bf16(xl, "model", 1, g)
 
     return shard_map(local, mesh=mesh, in_specs=P(dp, "model", None),
-                     out_specs=P(dp, None, None), check_vma=False)(x)
+                     out_specs=P(dp, None, None))(x)
 
 
 def tp_in_project(x: jax.Array, ws: Sequence[jax.Array], mesh: Mesh,
@@ -126,7 +127,7 @@ def tp_in_project(x: jax.Array, ws: Sequence[jax.Array], mesh: Mesh,
     out_specs = tuple(P(dp, None, None if rep[i] else "model")
                       for i in range(len(ws)))
     return shard_map(local, mesh=mesh, in_specs=in_specs,
-                     out_specs=out_specs, check_vma=False)(x, *ws)
+                     out_specs=out_specs)(x, *ws)
 
 
 def tp_project(y: jax.Array, w: jax.Array, mesh: Mesh) -> jax.Array:
@@ -153,4 +154,4 @@ def tp_project(y: jax.Array, w: jax.Array, mesh: Mesh) -> jax.Array:
 
     return shard_map(local, mesh=mesh,
                      in_specs=(P(dp, None, "model"), P("model", "data")),
-                     out_specs=P(dp, "model", None), check_vma=False)(y, w)
+                     out_specs=P(dp, "model", None))(y, w)

@@ -1,0 +1,91 @@
+"""Minimal deterministic stand-in for `hypothesis` (gated dependency).
+
+The container CI image does not ship hypothesis and the repo may not add
+dependencies, so conftest installs this shim into ``sys.modules`` when the
+real library is missing.  It covers exactly the surface the test suite
+uses — ``given``, ``settings(deadline=, max_examples=)`` and the
+``integers`` / ``floats`` / ``sampled_from`` strategies — by drawing
+``max_examples`` pseudo-random examples from a fixed seed (property tests
+become deterministic sampled tests).  With the real hypothesis installed
+this module is never imported.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def booleans():
+    return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def given(*strategies):
+    """Fills the LAST len(strategies) parameters of the test (matching how
+    the suite uses positional @given); earlier params stay visible to
+    pytest as fixtures."""
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        lead = params[:len(params) - len(strategies)]
+        filled = [p.name for p in params[len(params) - len(strategies):]]
+
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_stub_settings", {})
+            n = cfg.get("max_examples", 10)
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                # bind drawn values by NAME so fixtures passed as kwargs
+                # (pytest's convention) can't collide positionally
+                drawn = {name: s.draw(rng)
+                         for name, s in zip(filled, strategies)}
+                fn(*args, **kwargs, **drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = sig.replace(parameters=lead)
+        return wrapper
+    return deco
+
+
+def settings(**cfg):
+    def deco(fn):
+        fn._stub_settings = dict(cfg)
+        return fn
+    return deco
+
+
+def install() -> None:
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    stm = types.ModuleType("hypothesis.strategies")
+    for f in (integers, floats, sampled_from, booleans):
+        setattr(stm, f.__name__, f)
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = stm
+    hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = stm

@@ -6,6 +6,12 @@ import pytest
 import jax
 from jax.sharding import Mesh
 
+try:
+    import hypothesis  # noqa: F401
+except ImportError:                   # gated dep: container may not ship it
+    from _hypothesis_stub import install
+    install()
+
 
 @pytest.fixture(scope="session")
 def mesh():

@@ -2,6 +2,8 @@
 step on CPU, asserting output shapes and finiteness (task requirement f)."""
 import jax
 import jax.numpy as jnp
+
+from repro.compat import set_mesh
 import pytest
 
 from repro.configs.base import OptimizerConfig
@@ -40,7 +42,7 @@ def test_full_config_resolves(arch):
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_forward_shapes(arch, mesh, rng):
     cfg = get_smoke_config(arch)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = model_lib.init_params(rng, cfg, mesh)
         batch = _batch(cfg, rng)
         logits, stats = jax.jit(
@@ -53,7 +55,7 @@ def test_smoke_forward_shapes(arch, mesh, rng):
 def test_smoke_train_step(arch, mesh, rng):
     cfg = get_smoke_config(arch)
     opt = OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=10)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state = init_train_state(rng, cfg, opt, mesh)
         step = jax.jit(make_train_step(cfg, opt, mesh))
         batch = _batch(cfg, rng)
@@ -74,7 +76,7 @@ def test_smoke_train_step(arch, mesh, rng):
                                   "whisper-base"])
 def test_smoke_decode_step(arch, mesh, rng):
     cfg = get_smoke_config(arch)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = model_lib.init_params(rng, cfg, mesh)
         state = model_lib.init_decode_state(cfg, B, 32, mesh)
         tokens = jax.random.randint(rng, (B, 1), 0, cfg.vocab_size)
@@ -90,7 +92,7 @@ def test_decode_matches_forward(mesh, rng):
     """Teacher-forced decode must reproduce full-forward logits (KV-cache /
     recurrent-state correctness) for an attention arch."""
     cfg = get_smoke_config("granite-8b").replace(dtype="float32")
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = model_lib.init_params(rng, cfg, mesh)
         tokens = jax.random.randint(rng, (1, 8), 0, cfg.vocab_size)
         full, _ = jax.jit(lambda p, b: model_lib.forward(p, cfg, mesh, b))(
@@ -112,7 +114,7 @@ def test_decode_matches_forward_ssm(mesh, rng):
     chunked SSD scan; mLSTM step vs chunkwise; sLSTM step vs scan)."""
     for arch in ("jamba-1.5-large-398b", "xlstm-350m"):
         cfg = get_smoke_config(arch).replace(dtype="float32")
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             params = model_lib.init_params(rng, cfg, mesh)
             tokens = jax.random.randint(rng, (1, 8), 0, cfg.vocab_size)
             # use_lsh=False: decode is exact; LSH forward is lossy by design

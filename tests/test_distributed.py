@@ -28,6 +28,7 @@ def test_moe_ep_path_multidevice_matches_dense():
     across data shards."""
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import set_mesh
         from jax.sharding import Mesh
         from repro.configs.base import LSHConfig, MoEConfig
         from repro.core.lsh_moe import lsh_moe_apply, lsh_moe_init
@@ -38,7 +39,7 @@ def test_moe_ep_path_multidevice_matches_dense():
         params = lsh_moe_init(jax.random.PRNGKey(0), 16, cfg, mesh,
                               mlp_act="swiglu", dtype=jnp.float32)
         x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             y_ep, _ = jax.jit(lambda p, x: lsh_moe_apply(
                 p, x, cfg, mesh, mlp_act="swiglu", mode="train",
                 use_lsh=False))(params, x)
@@ -55,6 +56,7 @@ def test_tp_project_multidevice_matches_matmul():
     """Explicit bf16 reduce-scatter projection == plain matmul."""
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import set_mesh
         from jax.sharding import Mesh
         from repro.runtime.tp import tp_in_project, tp_project
         mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
@@ -62,7 +64,7 @@ def test_tp_project_multidevice_matches_matmul():
         x = jax.random.normal(k, (2, 8, 16), jnp.float32)
         w1 = jax.random.normal(jax.random.fold_in(k, 1), (16, 32)) * 0.1
         w2 = jax.random.normal(jax.random.fold_in(k, 2), (32, 16)) * 0.1
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             def f(x, w1, w2):
                 (h,) = tp_in_project(x, (w1,), mesh)
                 return tp_project(h, w2, mesh)
@@ -71,7 +73,7 @@ def test_tp_project_multidevice_matches_matmul():
             err = float(jnp.abs(y - want).max())
         assert err < 1e-3, err
         # gradients flow through the custom_vjp collectives
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             g = jax.jit(jax.grad(lambda w: jnp.sum(f(x, w, w2) ** 2)))(w1)
         gn = float(jnp.abs(g).sum())
         assert gn > 0
@@ -83,6 +85,7 @@ def test_tp_project_multidevice_matches_matmul():
 def test_dp_only_step_multidevice_matches_single():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import set_mesh
         from jax.sharding import Mesh
         from repro.configs.registry import get_smoke_config
         from repro.configs.base import OptimizerConfig
@@ -93,13 +96,13 @@ def test_dp_only_step_multidevice_matches_single():
         ds = SyntheticLMDataset(cfg.vocab_size, 16, 8)
         batch = ds.batch_at(0)
         mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             st = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh)
             st2, m = jax.jit(make_train_step(cfg, opt, mesh))(st, batch)
             l_multi = float(m["loss"])
         mesh1 = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
                      ("data", "model"))
-        with jax.set_mesh(mesh1):
+        with set_mesh(mesh1):
             st = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh1)
             st2, m = jax.jit(make_train_step(cfg, opt, mesh1))(st, batch)
             l_single = float(m["loss"])

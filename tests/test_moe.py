@@ -2,6 +2,8 @@
 bounds, gating invariants, expert placement permutation."""
 import jax
 import jax.numpy as jnp
+
+from repro.compat import set_mesh
 import numpy as np
 import pytest
 
@@ -48,7 +50,7 @@ def test_moe_lsh_close_to_baseline(mesh, rng):
     base = jax.random.normal(jax.random.fold_in(rng, 2), (1, 4, 16))
     x = jnp.repeat(base, 8, axis=1) + 1e-4 * jax.random.normal(
         jax.random.fold_in(rng, 3), (1, 32, 16))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         y_lsh, _ = jax.jit(lambda p, x: lsh_moe_apply(
             p, x, cfg, mesh, mlp_act="swiglu", use_lsh=True))(params, x)
         y_base, _ = jax.jit(lambda p, x: lsh_moe_apply(
@@ -68,7 +70,7 @@ def test_moe_gradients_flow(mesh, rng):
         y, stats = lsh_moe_apply(p, x, cfg, mesh, mlp_act="swiglu")
         return jnp.sum(y ** 2) + stats["aux_loss"]
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         g = jax.jit(jax.grad(loss, allow_int=True))(params)
     for name in ("w_up", "w_down", "w_gate", "router_w"):
         gn = float(jnp.abs(g[name].astype(jnp.float32)).sum())
@@ -84,7 +86,7 @@ def test_decode_path_matches_ep_path(mesh, rng):
     params = lsh_moe_init(rng, 16, cfg, mesh, mlp_act="swiglu",
                           dtype=jnp.float32)
     x = jax.random.normal(rng, (2, 8, 16))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         y_ep, _ = jax.jit(lambda p, x: lsh_moe_apply(
             p, x, cfg, mesh, mlp_act="swiglu", mode="train",
             use_lsh=False))(params, x)
@@ -105,3 +107,31 @@ def test_wire_compression_ratio():
     cap = 320
     slots = moe_lib.num_lsh_slots(cap, 0.2)
     assert slots / cap == pytest.approx(0.2, abs=0.02)
+
+
+def test_placement_update_roundtrip(mesh, rng):
+    """Permuting expert weights to a new placement and then back to the
+    identity placement must restore the original weights exactly."""
+    from repro.core.lsh_moe import apply_placement_update
+
+    cfg = _cfg()
+    params = lsh_moe_init(rng, 16, cfg, mesh, mlp_act="swiglu",
+                          dtype=jnp.float32)
+    e = cfg.num_experts
+    identity = jnp.arange(e, dtype=jnp.int32)
+    perm = jnp.array([2, 0, 3, 1], jnp.int32)
+
+    moved = apply_placement_update(params, perm, identity)
+    # logical expert i's weights now live at physical row perm[i]
+    np.testing.assert_array_equal(
+        np.asarray(moved["w_up"][np.asarray(perm)]),
+        np.asarray(params["w_up"][:e]))
+    assert not np.array_equal(np.asarray(moved["w_up"][:e]),
+                              np.asarray(params["w_up"][:e]))
+
+    restored = apply_placement_update(moved, identity, perm)
+    for name in ("w_gate", "w_up", "w_down"):
+        np.testing.assert_array_equal(np.asarray(restored[name]),
+                                      np.asarray(params[name]))
+    np.testing.assert_array_equal(np.asarray(restored["placement"]),
+                                  np.asarray(identity))

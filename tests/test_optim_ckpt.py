@@ -4,6 +4,8 @@ import os
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import set_mesh
 import numpy as np
 import pytest
 
@@ -35,6 +37,32 @@ def test_quant_roundtrip(rng):
     y = _dequant(d, x.shape)
     assert y.shape == x.shape
     np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=0.05)
+
+
+def test_int8_moments_bounded_under_wide_variance():
+    """Regression: blockwise-absmax int8 flushes small v entries to zero
+    when one entry dominates the block; without the quantization-floor
+    clamp the next update divides m by eps alone (~1e6x amplification) and
+    parameters diverge.  Updates must stay Adam-bounded."""
+    cfg = OptimizerConfig(lr=0.01, warmup_steps=0, total_steps=100,
+                          moment_dtype="int8", weight_decay=0.0,
+                          clip_norm=1e9)     # no clipping to mask the bug
+    p = {"w": jnp.zeros((128,), jnp.float32)}
+    state = adamw_init(p, cfg)
+    # entry 0 dominates the 128-wide quant block's absmax scales; entry 1
+    # sits in the band where stored m quantizes to q>=1 but stored v
+    # (scale ~gmax^2/127) rounds to q=0
+    g_hist = {"w": jnp.full((128,), 0.0, jnp.float32)
+              .at[0].set(1e3).at[1].set(10.0)}
+    for _ in range(2):                   # build m/v history for entry 1
+        p, state = adamw_update(p, g_hist, state, cfg, jnp.asarray(0.01))
+    # entry 1's gradient vanishes: its vf is the flushed stored v alone,
+    # while mf still carries history — without the floor the update is
+    # m/(0 + eps) ~ 1e8 and the parameter leaves orbit in one step
+    g_zero = {"w": g_hist["w"].at[1].set(0.0)}
+    for _ in range(3):
+        p, state = adamw_update(p, g_zero, state, cfg, jnp.asarray(0.01))
+    assert float(jnp.abs(p["w"]).max()) < 1.0
 
 
 @pytest.mark.parametrize("moment_dtype", ["float32", "int8"])
@@ -125,7 +153,7 @@ def test_checkpoint_restart_bit_exact(tmp_path, rng, mesh):
     cfg = get_smoke_config("smollm-360m")
     opt = OptimizerConfig(lr=1e-3, warmup_steps=0, total_steps=10)
     ds = SyntheticLMDataset(cfg.vocab_size, 16, 2)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         step_fn = jax.jit(make_train_step(cfg, opt, mesh))
         state = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh)
         for s in range(4):
@@ -149,8 +177,9 @@ def test_checkpoint_restart_bit_exact(tmp_path, rng, mesh):
 def test_grad_compression_error_feedback(rng, mesh):
     """int8 psum with error feedback: compression error telescopes — the
     mean over steps converges to the true mean."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
     g_true = {"w": jax.random.normal(rng, (8, 8))}
     err = init_error_state(g_true)
 
@@ -162,7 +191,7 @@ def test_grad_compression_error_feedback(rng, mesh):
                          in_specs=(P(None, None), P(None, None)),
                          out_specs=(P(None, None), P(None, None)))(g, e)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         acc = jnp.zeros_like(g_true["w"])
         e = err["w"]
         for _ in range(8):
