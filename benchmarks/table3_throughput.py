@@ -6,7 +6,10 @@ routed activations (occupied slots / tokens — the paper reports 11.7%);
 host (CPU wall clock; directional only); (c) projected v5e throughput gain
 from the roofline terms (collective term scaled by the configured rate);
 (d) kernel-backend ablation — compress/decompress wall clock and parity
-per dispatch backend (reference vs pallas_interpret; pallas_tpu on TPU)."""
+per dispatch backend (reference vs pallas_interpret; pallas_tpu on TPU);
+(e) routing cost — DispatchPlan build + dispatch/combine wall clock per
+backend, so the dispatch-layer term is separable from the all-to-all
+term in the fig7 ablation."""
 from __future__ import annotations
 
 import json
@@ -19,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import bench_mesh, tiny_moe_config, train_curve
-from repro.core import clustering
+from repro.core import clustering, routing
 from repro.core.hashing import make_rotations
 from repro.kernels import dispatch
 
@@ -71,6 +74,29 @@ def run(out_rows, steps: int = 20):
                 for b in backends)
     out_rows.append(("table3/backend_max_drift", drift * 1e6,
                      f"max|backend - reference|={drift:.2e}"))
+    # (e) routing cost: plan build + dispatch scatter + weighted combine,
+    # separated from the all-to-all/compression terms so the fig7 ablation
+    # can attribute dispatch-layer vs wire cost per backend
+    T, k, E, C, H = 2048, 2, 16, 320, 128
+    rkey = jax.random.fold_in(key, 5)
+    ids = jax.random.randint(rkey, (T, k), 0, E).astype(jnp.int32)
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(rkey, 1),
+                                         (T, k)))
+    xtok = jax.random.normal(jax.random.fold_in(rkey, 2), (T, H))
+    for b in backends:
+        def route_one(ids, w, xtok, b=b):
+            plan = routing.build_dispatch_plan(ids, w, E, C, backend=b)
+            buf = routing.dispatch_tokens(plan, xtok, backend=b)
+            return routing.combine_tokens(plan, buf, backend=b)
+        fn = jax.jit(route_one)
+        fn(ids, w, xtok).block_until_ready()               # compile
+        t0 = time.time()
+        for _ in range(5):
+            fn(ids, w, xtok).block_until_ready()
+        dt = (time.time() - t0) / 5
+        out_rows.append((f"table3/routing_{b}_ms", dt * 1e9,
+                         f"plan+dispatch+combine={dt * 1e3:.2f}ms "
+                         f"(T={T} k={k} E={E} C={C} H={H})"))
     # (c) projected v5e speedup from dry-run roofline
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                        "dryrun.json")

@@ -45,10 +45,14 @@ class MoEConfig:
     router_aux_weight: float = 0.01     # load-balance loss weight
     router_z_weight: float = 1e-3
     lsh: LSHConfig = field(default_factory=LSHConfig)
-    # Kernel backend for the LSH compress/decompress hot path:
+    # Kernel backend for the routing + LSH compress/decompress hot path:
     # "auto" | "reference" | "pallas_interpret" | "pallas_tpu"
     # (resolution order in kernels/dispatch.py; docs/kernels.md).
     kernel_backend: str = "auto"
+    # Per-op backend overrides on top of kernel_backend: ((op, backend), ...)
+    # with op one of kernels.dispatch.OPS — e.g. force just the scatter back
+    # to "reference" while bisecting a kernel regression.
+    kernel_backend_overrides: Tuple[Tuple[str, str], ...] = ()
 
 
 @dataclass(frozen=True)

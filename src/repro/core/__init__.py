@@ -3,9 +3,12 @@ from repro.core.hashing import cross_polytope_hash, lsh_hash, make_rotations, sp
 from repro.core.clustering import Compressed, compress, decompress
 from repro.core.gating import top_k_gating
 from repro.core.lsh_moe import lsh_moe_apply, lsh_moe_init
+from repro.core.routing import (DispatchPlan, build_dispatch_plan,
+                                combine_tokens, dispatch_tokens)
 
 __all__ = [
     "cross_polytope_hash", "lsh_hash", "make_rotations", "spherical_hash",
     "Compressed", "compress", "decompress", "top_k_gating",
-    "lsh_moe_apply", "lsh_moe_init",
+    "lsh_moe_apply", "lsh_moe_init", "DispatchPlan", "build_dispatch_plan",
+    "dispatch_tokens", "combine_tokens",
 ]

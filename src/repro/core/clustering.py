@@ -36,7 +36,8 @@ class Compressed(NamedTuple):
 
 
 def assign_slots(tokens: jax.Array, rotations: jax.Array, num_slots: int,
-                 hash_type: str, backend: str = dispatch.AUTO) -> jax.Array:
+                 hash_type: str,
+                 backend: dispatch.BackendSpec = dispatch.AUTO) -> jax.Array:
     """Bucket ids folded into [0, num_slots)."""
     ids = lsh_hash(tokens, rotations, hash_type, backend=backend)
     return jnp.abs(ids) % jnp.int32(num_slots)
@@ -45,10 +46,11 @@ def assign_slots(tokens: jax.Array, rotations: jax.Array, num_slots: int,
 def compress(tokens: jax.Array, valid: jax.Array, rotations: jax.Array,
              num_slots: int, hash_type: str = "cross_polytope",
              error_compensation: bool = True,
-             backend: str = dispatch.AUTO) -> Compressed:
-    """tokens: [G, C, H]; valid: [G, C] bool (occupied buffer slots)."""
+             backend: dispatch.BackendSpec = dispatch.AUTO) -> Compressed:
+    """tokens: [G, C, H]; valid: [G, C] bool (occupied buffer slots).
+    ``backend`` is a name or the per-op mapping from
+    ``dispatch.resolve_backends`` — each op resolves its own entry."""
     G, C, H = tokens.shape
-    backend = dispatch.resolve_backend(backend)
     slots = assign_slots(tokens, rotations, num_slots, hash_type, backend)
     slots = jnp.where(valid, slots, num_slots)            # invalid -> overflow bin
 
@@ -71,7 +73,7 @@ def compress(tokens: jax.Array, valid: jax.Array, rotations: jax.Array,
 
 
 def decompress(expert_out: jax.Array, comp: Compressed,
-               backend: str = dispatch.AUTO) -> jax.Array:
+               backend: dispatch.BackendSpec = dispatch.AUTO) -> jax.Array:
     """expert_out: [G, S, H] = E(centroids).  Returns [G, C, H] ≈ E(tokens).
 
     Paper Eq. 5: Y = E(centroid_of(token)) + residual(token)."""

@@ -1,4 +1,9 @@
-"""Top-k softmax gating with load-balance + router-z auxiliary losses."""
+"""Top-k softmax gating with load-balance + router-z auxiliary losses.
+
+Position assignment / capacity bookkeeping lives in ``core.routing``
+(DispatchPlan) and the ``positions_in_expert`` registry op
+(kernels/dispatch.py) — this module only scores and selects experts.
+"""
 from __future__ import annotations
 
 from typing import NamedTuple
@@ -8,17 +13,24 @@ import jax.numpy as jnp
 
 
 class GateOut(NamedTuple):
-    expert_ids: jax.Array     # [T, k] int32
+    expert_ids: jax.Array     # [T, k] int32 (physical slots when placed)
     weights: jax.Array        # [T, k] f32 (renormalized top-k softmax)
     aux_loss: jax.Array       # scalar (local mean; psum'd by caller)
     z_loss: jax.Array         # scalar
-    load: jax.Array           # [E] token counts (for the rebalancer)
+    # [E] token counts in PHYSICAL expert order.  The MoE paths report the
+    # equivalent DispatchPlan.counts; tests pin the two computations equal.
+    load: jax.Array
 
 
 def top_k_gating(x: jax.Array, router_w: jax.Array, top_k: int,
                  placement: jax.Array | None = None) -> GateOut:
     """x: [T, H]; router_w: [H, E].  placement: optional permutation mapping
-    logical expert -> physical slot (hot-expert rebalancing)."""
+    logical expert -> physical slot (hot-expert rebalancing).
+
+    The auxiliary losses stay in LOGICAL space (they pair routing fractions
+    with router probabilities, both logical); ``load`` is reported in
+    PHYSICAL slot order — the order dispatch buffers, capacity drops, and
+    the rebalancer's per-rank sums actually happen in."""
     logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)               # [T, E]
     weights, ids = jax.lax.top_k(probs, top_k)            # [T, k]
@@ -30,22 +42,8 @@ def top_k_gating(x: jax.Array, router_w: jax.Array, top_k: int,
     p = probs.mean(axis=0)
     aux = E * jnp.sum(f * p)
     z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
-    load = mask.sum(axis=0)
+    load = mask.sum(axis=0)                               # logical order
     if placement is not None:
         ids = placement[ids]
+        load = jnp.zeros_like(load).at[placement].set(load)  # physical order
     return GateOut(ids.astype(jnp.int32), weights, aux, z, load)
-
-
-def positions_in_expert(expert_ids: jax.Array, num_experts: int,
-                        capacity: int) -> tuple[jax.Array, jax.Array]:
-    """Stable position of each (token, choice) within its expert's buffer.
-
-    expert_ids: [F] flattened (token-major => earlier tokens win capacity).
-    Returns (pos [F], keep [F]).  Cumsum over a one-hot — O(F*E) but fuses
-    to a single pass; F*E stays small per device (<= a few M entries).
-    """
-    onehot = jax.nn.one_hot(expert_ids, num_experts, dtype=jnp.int32)  # [F,E]
-    pos_all = jnp.cumsum(onehot, axis=0) - 1                            # [F,E]
-    pos = jnp.take_along_axis(pos_all, expert_ids[:, None], axis=1)[:, 0]
-    keep = pos < capacity
-    return pos, keep

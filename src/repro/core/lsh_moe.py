@@ -45,7 +45,8 @@ def lsh_moe_apply(params: Dict, x: jax.Array, cfg: MoEConfig, mesh: Mesh, *,
     decompress hot path (kernels/dispatch.py)."""
     if mode == "decode":
         return moe_lib.moe_dense_dispatch(x, params, cfg, mesh,
-                                          mlp_act=mlp_act)
+                                          mlp_act=mlp_act,
+                                          kernel_backend=kernel_backend)
     return moe_lib.moe_expert_parallel(x, params, cfg, mesh, mlp_act=mlp_act,
                                        use_lsh=use_lsh,
                                        kernel_backend=kernel_backend)

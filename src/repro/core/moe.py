@@ -1,18 +1,25 @@
 """Mixture-of-Experts layers.
 
-Two dispatch paths:
+Both dispatch paths are thin consumers of the same pipeline —
+
+    top_k_gating -> routing.build_dispatch_plan -> routing.dispatch_tokens
+    -> expert MLP -> routing.combine_tokens
+
+with every routing op (position assignment, buffer scatter, weighted
+combine) dispatched through the kernel backend registry
+(kernels/dispatch.py) via core.routing.DispatchPlan:
 
 1. ``moe_expert_parallel`` — the paper's setting (train / prefill): a
-   ``shard_map`` region over the mesh in which tokens are bucketed per
-   expert with static capacity, optionally LSH-compressed (core/clustering),
-   exchanged via ``jax.lax.all_to_all`` over the `model` axis (= expert
-   parallelism), processed by the local experts, exchanged back, and
-   error-compensated.  The *compressed* tensor is the only thing crossing
-   the wire — the collective operand shrinks by the configured rate.
+   ``shard_map`` region over the mesh in which the plan's dispatch buffer
+   is optionally LSH-compressed (core/clustering), exchanged via
+   ``jax.lax.all_to_all`` over the `model` axis (= expert parallelism),
+   processed by the local experts, exchanged back, and error-compensated.
+   The *compressed* tensor is the only thing crossing the wire — the
+   collective operand shrinks by the configured rate.
 
-2. ``moe_dense_dispatch`` — decode path: token counts are tiny, so a
-   GSPMD one-hot-contraction dispatch (GShard style) is cheaper than the
-   explicit exchange and needs no shard_map.
+2. ``moe_dense_dispatch`` — decode path: token counts are tiny, so the
+   plan is consumed without shard_map or collectives (GSPMD partitions the
+   einsums); same plan, no wire.
 
 Expert weights are stored [E, H, F] sharded P(model, data, -): expert dim
 over `model` (EP), H over `data` (FSDP); the region all-gathers over `data`
@@ -30,8 +37,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.configs.base import MoEConfig
-from repro.core import clustering
-from repro.core.gating import positions_in_expert, top_k_gating
+from repro.core import clustering, routing
+from repro.core.gating import top_k_gating
 from repro.kernels import dispatch
 from repro.runtime.sharding import axis_size, dp_axes
 
@@ -52,6 +59,32 @@ def num_lsh_slots(capacity: int, rate: float) -> int:
     return max(8, int(math.ceil(capacity * rate / 8) * 8))
 
 
+def _resolve_moe_backend(cfg: MoEConfig, kernel_backend, *,
+                         lsh_active: bool) -> Dict[str, str]:
+    """Trace-time resolution of the per-op backend mapping: call-site
+    override > cfg.kernel_backend, then cfg.kernel_backend_overrides on
+    top (kernels/dispatch.py resolution order).  When LSH is off, a
+    TPU-targeted config degrades ``pallas_tpu`` to ``reference`` instead
+    of raising, so the use_lsh=False baseline (and decode) still traces
+    on CPU hosts; name/op validation applies either way."""
+    return dispatch.resolve_backends(
+        kernel_backend or cfg.kernel_backend, cfg.kernel_backend_overrides,
+        off_tpu_fallback=None if lsh_active else dispatch.REFERENCE)
+
+
+def _expert_mlp(tok, w_gate, w_up, w_down, mlp_act: str):
+    """[E, t, H] tokens through the per-expert MLP stack -> [E, t, H]."""
+    h = jnp.einsum("eth,ehf->etf", tok, w_up)
+    if mlp_act == "swiglu":
+        g = jnp.einsum("eth,ehf->etf", tok, w_gate)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    elif mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("etf,efh->eth", h, w_down)
+
+
 # --------------------------------------------------------------------------
 # Path 1: expert-parallel shard_map (train / prefill) — the paper's setting.
 # --------------------------------------------------------------------------
@@ -67,21 +100,15 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
     xf = x.reshape(T, H)
 
     gate = top_k_gating(xf, router_w, cfg.top_k, placement)
-    k = cfg.top_k
-    e_flat = gate.expert_ids.reshape(T * k)
-    pos, keep = positions_in_expert(e_flat, e_pad, capacity)
-
-    # dispatch buffer [E_pad, C, H] (+ occupancy) via capped scatter-add
-    src = jnp.repeat(xf, k, axis=0) * keep[:, None].astype(xf.dtype)
-    disp = jnp.zeros((e_pad, capacity, H), xf.dtype)
-    disp = disp.at[e_flat, pos].add(src, mode="drop")
-    occ = jnp.zeros((e_pad, capacity), jnp.float32)
-    occ = occ.at[e_flat, pos].add(keep.astype(jnp.float32), mode="drop")
-    valid = occ > 0
+    plan = routing.build_dispatch_plan(gate.expert_ids, gate.weights,
+                                       e_pad, capacity,
+                                       backend=kernel_backend)
+    disp = routing.dispatch_tokens(plan, xf,
+                                   backend=kernel_backend).astype(xf.dtype)
 
     if use_lsh:
         slots = num_lsh_slots(capacity, cfg.lsh.compression_rate)
-        comp = clustering.compress(disp, valid, rot, slots,
+        comp = clustering.compress(disp, plan.occupancy, rot, slots,
                                    cfg.lsh.hash_type,
                                    cfg.lsh.error_compensation,
                                    backend=kernel_backend)
@@ -101,16 +128,7 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
     wd = all_gather_bf16(w_down, "data", 1, data_r)
 
     tok = recv.transpose(1, 0, 2, 3).reshape(e_local, model_r * c_wire, H)
-    tok = tok.astype(x.dtype)
-    h = jnp.einsum("eth,ehf->etf", tok, wu)
-    if mlp_act == "swiglu":
-        g = jnp.einsum("eth,ehf->etf", tok, wg)
-        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
-    elif mlp_act == "relu2":
-        h = jnp.square(jax.nn.relu(h))
-    else:
-        h = jax.nn.gelu(h)
-    out = jnp.einsum("etf,efh->eth", h, wd)
+    out = _expert_mlp(tok.astype(x.dtype), wg, wu, wd, mlp_act)
 
     # ---- all-to-all #2 (results return compressed) -----------------------
     back = out.reshape(e_local, model_r, c_wire, H).transpose(1, 0, 2, 3)
@@ -124,16 +142,12 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
     else:
         out_tok = expert_out
 
-    # combine: gather own (expert, pos) results, weight, sum over k
-    flat = out_tok[e_flat, jnp.minimum(pos, capacity - 1)]
-    flat = flat * keep[:, None].astype(flat.dtype)
-    y = (flat.reshape(T, k, H) * gate.weights[..., None]).sum(axis=1)
+    y = routing.combine_tokens(plan, out_tok, backend=kernel_backend)
 
     all_axes = tuple(mesh.axis_names)
     aux = jax.lax.pmean(gate.aux_loss, all_axes)
     z = jax.lax.pmean(gate.z_loss, all_axes)
-    load = jax.lax.psum(jnp.pad(gate.load, (0, e_pad - gate.load.shape[0])),
-                        all_axes)
+    load = jax.lax.psum(plan.load(), all_axes)
     return y.reshape(B_loc, S_loc, H).astype(x.dtype), aux, z, load
 
 
@@ -146,7 +160,8 @@ def moe_expert_parallel(x: jax.Array, params: Dict, cfg: MoEConfig,
 
     params: router_w [H,E], w_gate/w_up [E_pad,H,F], w_down [E_pad,F,H],
     lsh_rot [L,H,Dr], placement [E].  ``kernel_backend`` overrides
-    cfg.kernel_backend (resolved before tracing — a static choice).
+    cfg.kernel_backend (resolved before tracing — a static choice);
+    cfg.kernel_backend_overrides selects per-op backends on top.
     """
     B, S, H = x.shape
     dp = dp_axes(mesh)
@@ -157,10 +172,7 @@ def moe_expert_parallel(x: jax.Array, params: Dict, cfg: MoEConfig,
     capacity = expert_capacity(t_loc, e_pad, cfg.top_k, cfg.capacity_factor)
     use_lsh = cfg.lsh.enabled if use_lsh is None else use_lsh
     wire_dtype = jnp.dtype(cfg.lsh.wire_dtype) if use_lsh else x.dtype
-    # resolve only when a kernel can actually run: a TPU-targeted config
-    # must still trace the use_lsh=False baseline on CPU hosts
-    backend = (dispatch.resolve_backend(kernel_backend or cfg.kernel_backend)
-               if use_lsh else dispatch.REFERENCE)
+    backend = _resolve_moe_backend(cfg, kernel_backend, lsh_active=use_lsh)
 
     tok_spec = P(dp if len(dp) > 1 else (dp[0] if dp else None), "model", None)
     ew_spec = P("model", "data", None)
@@ -181,38 +193,28 @@ def moe_expert_parallel(x: jax.Array, params: Dict, cfg: MoEConfig,
 
 
 # --------------------------------------------------------------------------
-# Path 2: dense one-hot dispatch (decode) — GSPMD partitions everything.
+# Path 2: dense dispatch (decode) — GSPMD partitions everything.
 # --------------------------------------------------------------------------
 
 def moe_dense_dispatch(x: jax.Array, params: Dict, cfg: MoEConfig,
-                       mesh: Mesh, *, mlp_act: str) -> Tuple[jax.Array, Dict]:
-    """x: [B, S, H] with tiny B*S (decode).  Pure einsum dispatch."""
+                       mesh: Mesh, *, mlp_act: str,
+                       kernel_backend: Optional[str] = None
+                       ) -> Tuple[jax.Array, Dict]:
+    """x: [B, S, H] with tiny B*S (decode).  Same plan pipeline as the
+    expert-parallel path, minus compression and collectives."""
     B, S, H = x.shape
     T = B * S
     xf = x.reshape(T, H)
     e_pad = params["w_up"].shape[0]
     gate = top_k_gating(xf, params["router_w"], cfg.top_k, params["placement"])
-    k = cfg.top_k
-    cap = max(4, int(math.ceil(T * k / e_pad * 2)))
-    e_flat = gate.expert_ids.reshape(T * k)
-    pos, keep = positions_in_expert(e_flat, e_pad, cap)
-    onehot = (jax.nn.one_hot(e_flat, e_pad, dtype=jnp.float32)[:, :, None]
-              * jax.nn.one_hot(pos, cap, dtype=jnp.float32)[:, None, :]
-              * keep[:, None, None])                      # [F, E, C]
-    xr = jnp.repeat(xf.astype(jnp.float32), k, axis=0)    # [F, H]
-    disp = jnp.einsum("fec,fh->ech", onehot, xr)
-    disp = disp.astype(x.dtype)
-    h = jnp.einsum("eth,ehf->etf", disp, params["w_up"])
-    if mlp_act == "swiglu":
-        g = jnp.einsum("eth,ehf->etf", disp, params["w_gate"])
-        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
-    elif mlp_act == "relu2":
-        h = jnp.square(jax.nn.relu(h))
-    else:
-        h = jax.nn.gelu(h)
-    eo = jnp.einsum("etf,efh->eth", h, params["w_down"])
-    flat = jnp.einsum("fec,ech->fh", onehot, eo.astype(jnp.float32))
-    y = (flat.reshape(T, k, H) * gate.weights[..., None]).sum(axis=1)
+    cap = max(4, int(math.ceil(T * cfg.top_k / e_pad * 2)))
+    backend = _resolve_moe_backend(cfg, kernel_backend, lsh_active=False)
+    plan = routing.build_dispatch_plan(gate.expert_ids, gate.weights,
+                                       e_pad, cap, backend=backend)
+    disp = routing.dispatch_tokens(plan, xf, backend=backend).astype(x.dtype)
+    eo = _expert_mlp(disp, params.get("w_gate"), params["w_up"],
+                     params["w_down"], mlp_act)
+    y = routing.combine_tokens(plan, eo.astype(jnp.float32), backend=backend)
     return (y.reshape(B, S, H).astype(x.dtype),
             {"aux_loss": gate.aux_loss, "z_loss": gate.z_loss,
-             "expert_load": jnp.pad(gate.load, (0, e_pad - gate.load.shape[0]))})
+             "expert_load": plan.load()})

@@ -1,0 +1,103 @@
+"""Token routing unified behind a DispatchPlan (the dispatch/combine hot
+path shared by both MoE paths).
+
+A ``DispatchPlan`` is the single static-shape routing artifact built once
+per step from the gate's top-k choices and consumed everywhere routing
+state is needed:
+
+  top_k_gating ─► build_dispatch_plan ─┬─► dispatch_tokens  ([E, C, H])
+                                       ├─► plan.occupancy   (LSH compress)
+                                       ├─► combine_tokens   ([T, H])
+                                       └─► plan.counts      (load metric)
+
+Every array in the plan encodes drops via the registry's overflow-bin
+contract (kernels/dispatch.py): a dropped (token, choice) carries expert
+id == num_experts and a position outside [0, capacity), so
+``dispatch_scatter`` contributes nothing for it and ``combine_gather``
+returns zero — no per-call-site keep-mask re-derivation.  All three routing ops dispatch
+through the kernel backend registry; ``backend`` accepts a single name or
+the per-op mapping from ``dispatch.resolve_backends``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+
+
+class DispatchPlan(NamedTuple):
+    """Static-shape routing state for one MoE layer invocation.
+
+    F = T * top_k flattened (token, choice) entries, token-major — earlier
+    tokens win capacity.  Expert ids are PHYSICAL (post-placement)."""
+    expert_ids: jax.Array   # [T, k] int32 physical expert per choice
+    weights: jax.Array      # [T, k] f32 renormalized combine weights
+    flat_ids: jax.Array     # [F] int32; == num_experts where dropped
+    positions: jax.Array    # [F] int32 buffer row; >= capacity where dropped
+    keep: jax.Array         # [F] bool — landed within capacity
+    counts: jax.Array       # [E] int32 uncapped per-expert demand (physical)
+    occupancy: jax.Array    # [E, C] bool — dispatch-buffer rows that filled
+    num_experts: int        # static: E (padded)
+    capacity: int           # static: C
+    top_k: int              # static: k
+
+    @property
+    def num_tokens(self) -> int:
+        return self.expert_ids.shape[0]
+
+    def load(self) -> jax.Array:
+        """[E] f32 routed-token counts (uncapped, physical order) — the
+        rebalancer / diagnostics view of this layer's routing."""
+        return self.counts.astype(jnp.float32)
+
+    def drop_fraction(self) -> jax.Array:
+        """Scalar fraction of (token, choice) entries dropped to overflow."""
+        F = self.keep.shape[0]
+        return 1.0 - self.keep.sum().astype(jnp.float32) / max(1, F)
+
+
+def build_dispatch_plan(expert_ids: jax.Array, weights: jax.Array,
+                        num_experts: int, capacity: int, *,
+                        backend: dispatch.BackendSpec = dispatch.AUTO
+                        ) -> DispatchPlan:
+    """expert_ids/weights: [T, k] from the gate (physical ids).  One
+    ``positions_in_expert`` registry call yields positions, drops, demand
+    counts, and buffer occupancy — everything downstream consumes."""
+    T, k = expert_ids.shape
+    e_flat = expert_ids.reshape(T * k).astype(jnp.int32)
+    pos, keep, counts = dispatch.positions_in_expert(
+        e_flat, num_experts, capacity, backend=backend)
+    flat_ids = jnp.where(keep, e_flat, num_experts)       # overflow bin
+    occupancy = (jnp.arange(capacity)[None, :] <
+                 jnp.minimum(counts, capacity)[:, None])  # [E, C]
+    return DispatchPlan(expert_ids, weights, flat_ids, pos, keep, counts,
+                        occupancy, num_experts, capacity, k)
+
+
+def dispatch_tokens(plan: DispatchPlan, tokens: jax.Array, *,
+                    backend: dispatch.BackendSpec = dispatch.AUTO
+                    ) -> jax.Array:
+    """tokens: [T, H] -> dispatch buffer [E, C, H] f32.  Dropped entries
+    contribute nothing (their plan ids sit in the overflow bin)."""
+    k = plan.top_k
+    src = jnp.repeat(tokens, k, axis=0)                   # [F, H] token-major
+    return dispatch.dispatch_scatter(plan.flat_ids, plan.positions, src,
+                                     plan.num_experts, plan.capacity,
+                                     backend=backend)
+
+
+def combine_tokens(plan: DispatchPlan, buf: jax.Array, *,
+                   backend: dispatch.BackendSpec = dispatch.AUTO
+                   ) -> jax.Array:
+    """buf: [E, C, H] per-expert outputs -> [T, H] f32 weighted top-k
+    combine.  Dropped entries gather zero, so a token whose every choice
+    overflowed contributes a zero row (the standard capacity-drop
+    convention)."""
+    T, k = plan.weights.shape
+    w_flat = plan.weights.reshape(T * k).astype(jnp.float32)
+    out = dispatch.combine_gather(plan.flat_ids, plan.positions, buf,
+                                  w_flat, backend=backend)  # [F, H]
+    return out.reshape(T, k, -1).sum(axis=1)

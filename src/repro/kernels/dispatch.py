@@ -20,12 +20,19 @@ The Pallas ops carry custom VJPs whose backwards are themselves kernel
 calls (gather ⟂ segment-sum are mutual transposes), so both training and
 inference dispatch through this registry — no [G, C, S] one-hot tensor is
 ever materialized on a Pallas backend.
+
+The registry covers the full dispatch/combine hot path, not just LSH
+compression: ``positions_in_expert`` / ``dispatch_scatter`` /
+``combine_gather`` are the routing ops consumed through
+``core.routing.DispatchPlan`` by both MoE paths.  Per-op backend overrides
+(``MoEConfig.kernel_backend_overrides``) resolve through
+``resolve_backends`` into the mapping form every public op accepts.
 """
 from __future__ import annotations
 
 import functools
 import os
-from typing import Callable, Dict
+from typing import Callable, Dict, Iterable, Mapping, Tuple, Union
 
 import numpy as np
 
@@ -36,7 +43,10 @@ from repro.compat import default_backend
 from repro.kernels import ref
 from repro.kernels.lsh_hash import lsh_hash_pallas
 from repro.kernels.residual_apply import residual_apply_pallas
+from repro.kernels.scatter_gather import (combine_gather_pallas,
+                                          dispatch_scatter_pallas)
 from repro.kernels.segment_centroid import segment_centroid_pallas
+from repro.kernels.token_position import positions_in_expert_pallas
 
 REFERENCE = "reference"
 PALLAS_INTERPRET = "pallas_interpret"
@@ -44,7 +54,12 @@ PALLAS_TPU = "pallas_tpu"
 AUTO = "auto"
 ENV_VAR = "REPRO_KERNEL_BACKEND"
 
-OPS = ("lsh_hash", "segment_centroid", "residual_apply")
+OPS = ("lsh_hash", "segment_centroid", "residual_apply",
+       "positions_in_expert", "dispatch_scatter", "combine_gather")
+
+# A backend selector: a single name, or a per-op mapping op -> name with a
+# "*" default (see resolve_backends / MoEConfig.kernel_backend_overrides).
+BackendSpec = Union[str, Mapping[str, str], None]
 
 
 def _float0_like(x):
@@ -110,6 +125,81 @@ def _residual_apply_bwd(num_slots, interpret, res, ct):
 _residual_apply_pl.defvjp(_residual_apply_fwd, _residual_apply_bwd)
 
 
+def _routing_vjp_pair(scatter_impl: Callable, gather_impl: Callable):
+    """Build the (dispatch_scatter, combine_gather) custom-VJP pair from a
+    backend's raw impls.  The mutual-transpose backward structure is
+    defined ONCE here and instantiated for every backend — including
+    ``reference``, which deliberately does NOT use XLA autodiff through
+    its one-hot einsum: identical backward programs are what make the
+    parity suite's bit-for-bit gradient check hold.
+
+    scatter_impl(ids, pos, src, num_experts, capacity) -> [E, C, H];
+    gather_impl(ids, pos, buf, weights) -> [F, H]."""
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+    def scatter(ids, pos, src, num_experts, capacity):
+        return scatter_impl(ids, pos, src, num_experts, capacity)
+
+    def scatter_fwd(ids, pos, src, num_experts, capacity):
+        buf = scatter(ids, pos, src, num_experts, capacity)
+        return buf, (ids, pos, jnp.zeros((), src.dtype))
+
+    def scatter_bwd(num_experts, capacity, res, ct):
+        ids, pos, sproto = res
+        # buf = scatter(src): the transpose is the gather of the cotangent
+        # at each entry's (expert, position) — the combine direction with
+        # unit weights
+        ones = jnp.ones(ids.shape, jnp.float32)
+        dsrc = gather_impl(ids, pos, ct, ones)
+        return (_float0_like(ids), _float0_like(pos),
+                dsrc.astype(sproto.dtype))
+
+    scatter.defvjp(scatter_fwd, scatter_bwd)
+
+    @jax.custom_vjp
+    def gather(ids, pos, buf, weights):
+        return gather_impl(ids, pos, buf, weights)
+
+    def gather_fwd(ids, pos, buf, weights):
+        return gather(ids, pos, buf, weights), (ids, pos, buf, weights)
+
+    def gather_bwd(res, ct):
+        ids, pos, buf, weights = res
+        E, C, _ = buf.shape
+        # out = w * gather(buf): d_buf is the scatter of the weighted
+        # cotangent (mutual transposes), d_w the per-entry inner product
+        # with the unweighted gather.
+        wct = ct * weights.astype(jnp.float32)[:, None]
+        dbuf = scatter_impl(ids, pos, wct, E, C)
+        ones = jnp.ones(ids.shape, jnp.float32)
+        gathered = gather_impl(ids, pos, buf, ones)
+        dw = jnp.sum(ct * gathered, axis=-1)
+        return (_float0_like(ids), _float0_like(pos), dbuf.astype(buf.dtype),
+                dw.astype(weights.dtype))
+
+    gather.defvjp(gather_fwd, gather_bwd)
+    return scatter, gather
+
+
+def _pallas_routing_impls(interpret: bool):
+    return (lambda ids, pos, src, num_experts, capacity:
+                dispatch_scatter_pallas(ids, pos, src,
+                                        num_experts=num_experts,
+                                        capacity=capacity,
+                                        interpret=interpret),
+            lambda ids, pos, buf, weights:
+                combine_gather_pallas(ids, pos, buf, weights,
+                                      interpret=interpret))
+
+
+_ROUTING_VJP = {
+    REFERENCE: _routing_vjp_pair(ref.dispatch_scatter_ref,
+                                 ref.combine_gather_ref),
+    PALLAS_INTERPRET: _routing_vjp_pair(*_pallas_routing_impls(True)),
+    PALLAS_TPU: _routing_vjp_pair(*_pallas_routing_impls(False)),
+}
+
+
 # --------------------------------------------------------------------------
 # Registry
 # --------------------------------------------------------------------------
@@ -122,15 +212,28 @@ def _pallas_ops(interpret: bool) -> Dict[str, Callable]:
             slots, x, num_slots, interpret),
         "residual_apply": lambda slots, eout, resid: _residual_apply_pl(
             slots, eout, resid, eout.shape[1], interpret),
+        "positions_in_expert": lambda ids, num_experts:
+            positions_in_expert_pallas(ids, num_experts=num_experts,
+                                       interpret=interpret),
+        "dispatch_scatter": _ROUTING_VJP[
+            PALLAS_INTERPRET if interpret else PALLAS_TPU][0],
+        "combine_gather": _ROUTING_VJP[
+            PALLAS_INTERPRET if interpret else PALLAS_TPU][1],
     }
 
 
+_REFERENCE_OPS: Dict[str, Callable] = {
+    "lsh_hash": ref.lsh_hash_ref,
+    "segment_centroid": ref.segment_centroid_ref,
+    "residual_apply": ref.residual_apply_ref,
+    "positions_in_expert": ref.positions_in_expert_ref,
+    "dispatch_scatter": _ROUTING_VJP[REFERENCE][0],
+    "combine_gather": _ROUTING_VJP[REFERENCE][1],
+}
+
+
 _REGISTRY: Dict[str, Dict[str, Callable]] = {
-    REFERENCE: {
-        "lsh_hash": ref.lsh_hash_ref,
-        "segment_centroid": ref.segment_centroid_ref,
-        "residual_apply": ref.residual_apply_ref,
-    },
+    REFERENCE: _REFERENCE_OPS,
     PALLAS_INTERPRET: _pallas_ops(interpret=True),
     PALLAS_TPU: _pallas_ops(interpret=False),
 }
@@ -148,11 +251,16 @@ def available_backends():
     return tuple(_REGISTRY)
 
 
-def resolve_backend(name: str | None = AUTO) -> str:
+def resolve_backend(name: str | None = AUTO, *,
+                    off_tpu_fallback: str | None = None) -> str:
     """Config/override name -> concrete backend (trace-time resolution).
 
     Order: explicit name > $REPRO_KERNEL_BACKEND > platform autodetect
-    (pallas_tpu on TPU, reference elsewhere)."""
+    (pallas_tpu on TPU, reference elsewhere).  ``off_tpu_fallback`` names
+    a backend to degrade to when the resolution lands on ``pallas_tpu``
+    off-TPU, instead of raising — for paths that must still trace a
+    TPU-targeted config on CPU hosts (the use_lsh=False baseline, decode).
+    Unknown names always raise."""
     name = name or AUTO
     if name == AUTO:
         name = os.environ.get(ENV_VAR, AUTO) or AUTO
@@ -162,6 +270,8 @@ def resolve_backend(name: str | None = AUTO) -> str:
         raise ValueError(f"unknown kernel backend {name!r}; "
                          f"available: {sorted(_REGISTRY)}")
     if name == PALLAS_TPU and default_backend() != "tpu":
+        if off_tpu_fallback is not None:
+            return resolve_backend(off_tpu_fallback)
         raise ValueError(
             "kernel backend 'pallas_tpu' requires a TPU (platform is "
             f"{default_backend()!r}); use 'pallas_interpret' to run "
@@ -169,24 +279,106 @@ def resolve_backend(name: str | None = AUTO) -> str:
     return name
 
 
+def resolve_backends(name: BackendSpec = AUTO,
+                     overrides: Iterable[Tuple[str, str]] = (), *,
+                     off_tpu_fallback: str | None = None) -> Dict[str, str]:
+    """Resolve a (default, per-op overrides) config into a concrete per-op
+    mapping, at trace time.  ``overrides`` pairs op name -> backend name
+    (MoEConfig.kernel_backend_overrides); the "*" key holds the resolved
+    default for every op not overridden.  ``off_tpu_fallback`` as in
+    ``resolve_backend``; unknown op / backend names always raise."""
+    rb = functools.partial(resolve_backend,
+                           off_tpu_fallback=off_tpu_fallback)
+    if isinstance(name, Mapping):                # already a per-op mapping
+        out = {op: rb(b) for op, b in name.items()}
+        out.setdefault("*", rb(AUTO))
+    else:
+        out = {"*": rb(name)}
+    for op, b in dict(overrides).items():
+        if op not in OPS:
+            raise ValueError(f"kernel_backend_overrides names unknown op "
+                             f"{op!r}; known ops: {sorted(OPS)}")
+        out[op] = rb(b)
+    return out
+
+
+def op_backend(backend: BackendSpec, op: str) -> str:
+    """Concrete backend for one op: ``backend`` is a name or a per-op
+    mapping from ``resolve_backends`` ("*" = default)."""
+    if isinstance(backend, Mapping):
+        return resolve_backend(backend.get(op, backend.get("*", AUTO)))
+    return resolve_backend(backend)
+
+
 # ------------------------------------------------------------ public ops --
+#
+# Shared overflow-bin contract: every integer id argument tolerates values
+# outside its valid range.  An out-of-range id CONTRIBUTES NOTHING on the
+# scatter direction (segment_centroid, dispatch_scatter) and GATHERS ZERO
+# on the gather direction (residual_apply, combine_gather), on every
+# backend.  Callers encode "dropped" (invalid token / over-capacity) by
+# pointing the id at the overflow bin instead of carrying a separate mask
+# through the hot path.
 
-def lsh_hash(x, rotations, *, backend: str = AUTO):
+def lsh_hash(x, rotations, *, backend: BackendSpec = AUTO):
     """x: [T, H]; rotations: [L, H, Dr] -> [T, L] int32 vertex ids."""
-    return _REGISTRY[resolve_backend(backend)]["lsh_hash"](x, rotations)
+    return _REGISTRY[op_backend(backend, "lsh_hash")]["lsh_hash"](
+        x, rotations)
 
 
-def segment_centroid(slots, x, num_slots: int, *, backend: str = AUTO):
+def segment_centroid(slots, x, num_slots: int, *, backend: BackendSpec = AUTO):
     """slots: [G, C] int32; x: [G, C, H] ->
     (centroids [G, S, H] f32, counts [G, S] f32).  Out-of-range slot ids
-    (>= num_slots) contribute to nothing — the invalid-token overflow bin."""
-    return _REGISTRY[resolve_backend(backend)]["segment_centroid"](
-        slots, x, num_slots)
+    (>= num_slots) contribute to nothing — the overflow bin."""
+    return _REGISTRY[op_backend(backend, "segment_centroid")][
+        "segment_centroid"](slots, x, num_slots)
 
 
-def residual_apply(slots, expert_out, residual, *, backend: str = AUTO):
+def residual_apply(slots, expert_out, residual, *, backend: BackendSpec = AUTO):
     """[G, C] ids, [G, S, H] outputs, [G, C, H] residuals -> [G, C, H] f32
     = expert_out[g, slots] + residual.  Out-of-range slot ids gather zero
-    on every backend (the invalid-token overflow bin)."""
-    return _REGISTRY[resolve_backend(backend)]["residual_apply"](
-        slots, expert_out, residual)
+    on every backend (the overflow bin)."""
+    return _REGISTRY[op_backend(backend, "residual_apply")][
+        "residual_apply"](slots, expert_out, residual)
+
+
+def positions_in_expert(expert_ids, num_experts: int, capacity: int, *,
+                        backend: BackendSpec = AUTO):
+    """Stable dispatch-buffer row of each flattened (token, choice).
+
+    expert_ids: [F] int32 (token-major => earlier tokens win capacity).
+    Returns (pos [F] int32, keep [F] bool, counts [E] int32): pos is the
+    entry's row within its expert's buffer; dropped entries land OUTSIDE
+    [0, capacity) — over-capacity entries keep their raw rank (>= capacity,
+    a useful overflow diagnostic), out-of-range ids get exactly capacity —
+    so downstream scatter/gather ignore them without a mask (the overflow
+    bin).  keep = landed within capacity; counts = uncapped per-expert
+    demand (physical order — the routing load diagnostic)."""
+    impl = _REGISTRY[op_backend(backend, "positions_in_expert")][
+        "positions_in_expert"]
+    pos, counts = impl(expert_ids, num_experts)
+    in_range = (expert_ids >= 0) & (expert_ids < num_experts)
+    pos = jnp.where(in_range, pos, capacity)
+    keep = pos < capacity
+    return pos.astype(jnp.int32), keep, counts.astype(jnp.int32)
+
+
+def dispatch_scatter(expert_ids, pos, src, num_experts: int, capacity: int,
+                     *, backend: BackendSpec = AUTO):
+    """[F] ids, [F] positions, [F, H] tokens -> [E, C, H] f32 dispatch
+    buffer: buf[e, c] = Σ src[f] over entries with (id, pos) == (e, c).
+    Entries with id outside [0, E) or position outside [0, C) contribute
+    nothing (overflow bin).  Differentiable in ``src`` (the backward pass
+    is ``combine_gather`` — mutual transposes)."""
+    return _REGISTRY[op_backend(backend, "dispatch_scatter")][
+        "dispatch_scatter"](expert_ids, pos, src, num_experts, capacity)
+
+
+def combine_gather(expert_ids, pos, buf, weights, *,
+                   backend: BackendSpec = AUTO):
+    """[F] ids, [F] positions, [E, C, H] buffer, [F] weights -> [F, H] f32
+    = weights[f] * buf[id_f, pos_f].  Out-of-range entries gather zero
+    (overflow bin).  Differentiable in ``buf`` and ``weights`` (the buffer
+    backward pass is ``dispatch_scatter`` — mutual transposes)."""
+    return _REGISTRY[op_backend(backend, "combine_gather")][
+        "combine_gather"](expert_ids, pos, buf, weights)

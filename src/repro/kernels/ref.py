@@ -37,3 +37,42 @@ def residual_apply_ref(slots: jax.Array, expert_out: jax.Array,
         jnp.clip(slots, 0, S - 1)[..., None].astype(jnp.int32), axis=1)
     gathered = gathered * in_range[..., None].astype(jnp.float32)
     return gathered + residual.astype(jnp.float32)
+
+
+def positions_in_expert_ref(expert_ids: jax.Array, num_experts: int):
+    """[F] ids -> (pos [F] int32, counts [E] f32): pos[f] = number of
+    earlier entries routed to the same expert (token-major stability),
+    counts[e] = uncapped total.  Ids outside [0, num_experts) match no
+    one-hot column: pos 0, counted nowhere.  Cumsum over a one-hot —
+    O(F*E) but fuses to a single pass."""
+    onehot = (expert_ids[:, None] ==
+              jnp.arange(num_experts)[None, :]).astype(jnp.int32)  # [F, E]
+    incl = jnp.cumsum(onehot, axis=0)
+    pos = jnp.sum(onehot * (incl - 1), axis=1)
+    return pos.astype(jnp.int32), onehot.sum(axis=0).astype(jnp.float32)
+
+
+def dispatch_scatter_ref(expert_ids: jax.Array, pos: jax.Array,
+                         src: jax.Array, num_experts: int,
+                         capacity: int) -> jax.Array:
+    """[F] ids, [F] positions, [F, H] tokens -> [E, C, H] f32 dispatch
+    buffer.  An entry with id outside [0, E) or position outside [0, C)
+    matches no one-hot row and contributes nothing (overflow bin)."""
+    oh_e = expert_ids[:, None] == jnp.arange(num_experts)[None, :]
+    oh_c = pos[:, None] == jnp.arange(capacity)[None, :]
+    onehot = (oh_e[:, :, None] & oh_c[:, None, :]).astype(jnp.float32)
+    return jnp.einsum("fec,fh->ech", onehot, src.astype(jnp.float32))
+
+
+def combine_gather_ref(expert_ids: jax.Array, pos: jax.Array,
+                       buf: jax.Array, weights: jax.Array) -> jax.Array:
+    """[F] ids, [F] positions, [E, C, H] buffer, [F] weights -> [F, H] f32
+    = weights[f] * buf[id_f, pos_f].  Out-of-range entries gather zero
+    (overflow bin) — the transpose of ``dispatch_scatter_ref``."""
+    E, C, _ = buf.shape
+    in_range = ((expert_ids >= 0) & (expert_ids < E) &
+                (pos >= 0) & (pos < C))
+    gathered = buf.astype(jnp.float32)[jnp.clip(expert_ids, 0, E - 1),
+                                       jnp.clip(pos, 0, C - 1)]
+    return gathered * (weights.astype(jnp.float32) *
+                       in_range.astype(jnp.float32))[:, None]

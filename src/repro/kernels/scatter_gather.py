@@ -1,0 +1,137 @@
+"""Pallas TPU kernels: dispatch-buffer scatter and its transpose gather.
+
+``dispatch_scatter`` builds the [E, C, H] expert dispatch buffer from the
+flattened routed tokens; ``combine_gather`` reads each (token, choice)'s
+row back out of a [E, C, H] result buffer and applies its combine weight.
+The two are mutual transposes (the same [C, tile_t] selection mask, used
+as onehot @ src vs sel^T @ buf), which is what lets each serve as the
+other's backward pass in kernels/dispatch.py — exactly how
+``segment_centroid`` / ``residual_apply`` pair up for the LSH path.
+
+TPUs have no fast scatter: both directions build the selection mask
+tile-locally in VREGs (iota compare on position AND expert id) and contract
+on the MXU, so no [F, E, C] one-hot ever reaches HBM.
+
+Overflow-bin contract (shared with every registry op): an entry whose
+expert id falls outside [0, E) or whose position falls outside [0, C)
+matches no mask row — it contributes nothing to the scatter and gathers
+exactly zero.
+
+Grids: scatter (E, F/tile_t) revisiting the [C, H] expert block along the
+token axis; gather (F/tile_t, E) revisiting the [tile_t, H] output block
+along the expert axis.  VMEM per step: one token tile + one expert block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sel_mask(ids, pos, expert, capacity, transpose):
+    """[C, tile_t] (or transposed) mask: pos one-hot AND id match."""
+    tile_t = ids.shape[0]
+    if transpose:
+        iota_c = jax.lax.broadcasted_iota(jnp.int32, (tile_t, capacity), 1)
+        return ((iota_c == pos[:, None]) &
+                (ids == expert)[:, None]).astype(jnp.float32)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (capacity, tile_t), 0)
+    return ((iota_c == pos[None, :]) &
+            (ids == expert)[None, :]).astype(jnp.float32)
+
+
+def _scatter_kernel(ids_ref, pos_ref, src_ref, out_ref, *, capacity):
+    e = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    sel = _sel_mask(ids_ref[0], pos_ref[0], e, capacity, transpose=False)
+    src = src_ref[...].astype(jnp.float32)                 # [tile_t, H]
+    out_ref[0] += jnp.dot(sel, src, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_experts", "capacity",
+                                             "tile_t", "interpret"))
+def dispatch_scatter_pallas(expert_ids: jax.Array, pos: jax.Array,
+                            src: jax.Array, *, num_experts: int,
+                            capacity: int, tile_t: int = 128,
+                            interpret: bool = True) -> jax.Array:
+    """expert_ids/pos: [F] int32; src: [F, H].  Returns [E, C, H] f32 with
+    buf[e, c] = Σ_{f: id_f == e, pos_f == c} src[f]; out-of-range entries
+    contribute nothing (overflow bin)."""
+    F, H = src.shape
+    pad_f = (-F) % tile_t
+    ids = expert_ids.reshape(1, F).astype(jnp.int32)
+    p = pos.reshape(1, F).astype(jnp.int32)
+    if pad_f:
+        ids = jnp.pad(ids, ((0, 0), (0, pad_f)), constant_values=-1)
+        p = jnp.pad(p, ((0, 0), (0, pad_f)))
+        src = jnp.pad(src, ((0, pad_f), (0, 0)))
+    Fp = F + pad_f
+    return pl.pallas_call(
+        functools.partial(_scatter_kernel, capacity=capacity),
+        grid=(num_experts, Fp // tile_t),
+        in_specs=[
+            pl.BlockSpec((1, tile_t), lambda e, t: (0, t)),
+            pl.BlockSpec((1, tile_t), lambda e, t: (0, t)),
+            pl.BlockSpec((tile_t, H), lambda e, t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, capacity, H), lambda e, t: (e, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_experts, capacity, H),
+                                       jnp.float32),
+        interpret=interpret,
+    )(ids, p, src)
+
+
+def _gather_kernel(ids_ref, pos_ref, w_ref, buf_ref, out_ref, *, capacity):
+    e = pl.program_id(1)
+
+    @pl.when(e == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    sel = _sel_mask(ids_ref[0], pos_ref[0], e, capacity, transpose=True)
+    w = w_ref[0].astype(jnp.float32)                       # [tile_t]
+    buf = buf_ref[0].astype(jnp.float32)                   # [C, H]
+    out_ref[...] += w[:, None] * jnp.dot(
+        sel, buf, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_t", "interpret"))
+def combine_gather_pallas(expert_ids: jax.Array, pos: jax.Array,
+                          buf: jax.Array, weights: jax.Array, *,
+                          tile_t: int = 128,
+                          interpret: bool = True) -> jax.Array:
+    """expert_ids/pos: [F] int32; buf: [E, C, H]; weights: [F].
+    Returns [F, H] f32 = weights[f] * buf[id_f, pos_f]; out-of-range
+    entries gather zero (overflow bin)."""
+    E, C, H = buf.shape
+    F = expert_ids.shape[0]
+    pad_f = (-F) % tile_t
+    ids = expert_ids.reshape(1, F).astype(jnp.int32)
+    p = pos.reshape(1, F).astype(jnp.int32)
+    w = weights.reshape(1, F)
+    if pad_f:
+        ids = jnp.pad(ids, ((0, 0), (0, pad_f)), constant_values=-1)
+        p = jnp.pad(p, ((0, 0), (0, pad_f)))
+        w = jnp.pad(w, ((0, 0), (0, pad_f)))
+    Fp = F + pad_f
+    out = pl.pallas_call(
+        functools.partial(_gather_kernel, capacity=C),
+        grid=(Fp // tile_t, E),
+        in_specs=[
+            pl.BlockSpec((1, tile_t), lambda t, e: (0, t)),
+            pl.BlockSpec((1, tile_t), lambda t, e: (0, t)),
+            pl.BlockSpec((1, tile_t), lambda t, e: (0, t)),
+            pl.BlockSpec((1, C, H), lambda t, e: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_t, H), lambda t, e: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((Fp, H), jnp.float32),
+        interpret=interpret,
+    )(ids, p, w, buf)
+    return out[:F]

@@ -81,10 +81,13 @@ def main() -> int:
     straggler = StragglerMonitor()
     mgr = CheckpointManager(args.ckpt, keep=3) if args.ckpt else None
     rebalancer = None
+    placement = None
     if cfg.has_moe():
-        from repro.core.moe import padded_num_experts
         rebalancer = ExpertRebalancer(cfg.moe.num_experts,
                                       mesh.shape.get("model", 1))
+        # expert_load arrives in physical slot order; identity until a
+        # proposed placement is applied (apply_placement_update)
+        placement = np.arange(cfg.moe.num_experts, dtype=np.int32)
 
     with set_mesh(mesh):
         state = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh)
@@ -106,7 +109,8 @@ def main() -> int:
                 print(f"[straggler] step {s} took {dt:.2f}s "
                       f"(ema {straggler.ema:.2f}s)", flush=True)
             if rebalancer is not None:
-                rebalancer.record(np.asarray(metrics["expert_load"]))
+                rebalancer.record(np.asarray(metrics["expert_load"]),
+                                  placement)
             if s % args.log_every == 0:
                 print(f"step {s} loss {loss:.4f} ce {float(metrics['ce']):.4f}"
                       f" lr {float(metrics['lr']):.2e} {dt:.2f}s "

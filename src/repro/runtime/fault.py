@@ -86,8 +86,16 @@ class ExpertRebalancer:
         self.trigger = imbalance_trigger
         self.load = np.zeros(num_experts)
 
-    def record(self, counts: np.ndarray):
-        c = np.asarray(counts)[: self.num_experts]
+    def record(self, counts: np.ndarray,
+               placement: Optional[np.ndarray] = None):
+        """counts arrive in PHYSICAL slot order (the order the MoE layer
+        reports ``expert_load`` in — see core.gating.GateOut); ``placement``
+        maps them back to the logical order the EMA and ``propose`` work
+        in.  None means the identity placement."""
+        c = np.asarray(counts)
+        if placement is not None:
+            c = c[np.asarray(placement)]          # physical -> logical
+        c = c[: self.num_experts]
         self.load = self.ema_coef * self.load + (1 - self.ema_coef) * c
 
     def imbalance(self, placement: np.ndarray) -> float:

@@ -9,8 +9,9 @@ import pytest
 
 from repro.configs.base import LSHConfig, MoEConfig
 from repro.core import moe as moe_lib
-from repro.core.gating import positions_in_expert, top_k_gating
+from repro.core.gating import top_k_gating
 from repro.core.lsh_moe import lsh_moe_apply, lsh_moe_init
+from repro.kernels.dispatch import positions_in_expert
 
 
 def _cfg(lsh=True, rate=0.5, comp=True):
@@ -23,13 +24,33 @@ def _cfg(lsh=True, rate=0.5, comp=True):
 
 def test_positions_in_expert_no_collision():
     ids = jnp.array([0, 1, 0, 0, 1, 2, 0, 2], jnp.int32)
-    pos, keep = positions_in_expert(ids, 3, capacity=2)
+    pos, keep, counts = positions_in_expert(ids, 3, capacity=2,
+                                            backend="reference")
     # same expert entries get distinct positions
     for e in range(3):
         taken = np.asarray(pos)[np.asarray(ids) == e]
         kept = taken[np.asarray(keep)[np.asarray(ids) == e]]
         assert len(set(kept.tolist())) == len(kept)
     assert bool(keep[0] and keep[2]) and not bool(keep[6])  # 3rd e0 dropped
+    np.testing.assert_array_equal(np.asarray(counts), [4, 2, 2])
+
+
+def test_gating_load_physical_order(rng):
+    """With a placement permutation active, `load` must be reported in
+    physical slot order (the order capacity drops actually happen in)."""
+    x = jax.random.normal(rng, (32, 16))
+    w = jax.random.normal(jax.random.fold_in(rng, 1), (16, 4))
+    perm = jnp.array([2, 0, 3, 1], jnp.int32)
+    logical = top_k_gating(x, w, 2)
+    physical = top_k_gating(x, w, 2, placement=perm)
+    # load[perm[e]] is logical expert e's count
+    np.testing.assert_array_equal(
+        np.asarray(physical.load)[np.asarray(perm)], np.asarray(logical.load))
+    # and it agrees with recounting the (physical) routed ids directly
+    recount = np.zeros(4)
+    for e in np.asarray(physical.expert_ids).ravel():
+        recount[e] += 1
+    np.testing.assert_array_equal(np.asarray(physical.load), recount)
 
 
 def test_gating_topk_weights_normalized(rng):

@@ -58,6 +58,23 @@ def test_rebalancer_no_proposal_when_balanced():
     assert reb.propose(np.arange(8, dtype=np.int32)) is None
 
 
+def test_rebalancer_unpermutes_physical_counts():
+    """`record` receives counts in PHYSICAL slot order (how the MoE layer
+    reports expert_load); with a placement active it must map them back to
+    the logical order the EMA and propose() work in."""
+    reb = ExpertRebalancer(num_experts=4, num_ranks=2, ema=0.0)
+    placement = np.array([2, 0, 3, 1], dtype=np.int32)
+    logical = np.array([40.0, 30.0, 20.0, 10.0])
+    physical = np.zeros(4)
+    physical[placement] = logical              # what the gate now reports
+    reb.record(physical, placement)
+    np.testing.assert_array_equal(reb.load, logical)
+    # identity placement (or None) leaves counts untouched
+    reb2 = ExpertRebalancer(num_experts=4, num_ranks=2, ema=0.0)
+    reb2.record(logical)
+    np.testing.assert_array_equal(reb2.load, logical)
+
+
 @settings(deadline=None, max_examples=10)
 @given(st.integers(0, 1000))
 def test_data_deterministic_per_step(step):
