@@ -9,7 +9,11 @@ from the roofline terms (collective term scaled by the configured rate);
 per dispatch backend (reference vs pallas_interpret; pallas_tpu on TPU);
 (e) routing cost — DispatchPlan build + dispatch/combine wall clock per
 backend, so the dispatch-layer term is separable from the all-to-all
-term in the fig7 ablation."""
+term in the fig7 ablation; (f) comm-algorithm ablation — modeled wire
+bytes/messages per hop (repro.comm.topology cost model) for the
+production wire tensor under flat | hierarchical | pipelined transports,
+with LSH on and off, so the transport choice is attributable separately
+from the payload compression."""
 from __future__ import annotations
 
 import json
@@ -97,6 +101,32 @@ def run(out_rows, steps: int = 20):
         out_rows.append((f"table3/routing_{b}_ms", dt * 1e9,
                          f"plan+dispatch+combine={dt * 1e3:.2f}ms "
                          f"(T={T} k={k} E={E} C={C} H={H})"))
+    # (f) comm-algorithm ablation: the production wire tensor (qwen3-ish
+    # EP layer on the 16x16 mesh, node_size=4 hosts) through the topology
+    # cost model — per-hop modeled bytes/messages and total seconds for
+    # each transport x LSH setting.  LSH shrinks every hop's payload by
+    # the configured rate; hierarchical shrinks the number of slow-link
+    # messages; pipelined trades messages for overlap.
+    from repro.comm import topology as comm_topo
+    from repro.core.moe import num_lsh_slots
+    topo = comm_topo.Topology(axis_sizes=(("data", 16), ("model", 16)),
+                              node_size=4)
+    e_pad, cap, h, chunks = 64, 512, 2048, 4
+    for use_lsh in (False, True):
+        c_wire = num_lsh_slots(cap, 0.2) if use_lsh else cap
+        msg = e_pad * c_wire * h * 2                   # bf16 wire
+        for algo in ("flat", "hierarchical", "pipelined"):
+            costs = comm_topo.a2a_cost(topo, "model", msg, algo,
+                                       chunks=chunks)
+            total = comm_topo.estimate_seconds(costs)
+            hops = " ".join(
+                f"{c.hop}={c.bytes / 2**20:.1f}MiB/{c.messages}msg"
+                for c in costs)
+            out_rows.append(
+                (f"table3/comm_{algo}_lsh{int(use_lsh)}_us", total * 1e12,
+                 f"modeled_a2a={total * 1e6:.1f}us {hops} "
+                 f"(msg={msg / 2**20:.1f}MiB"
+                 f"{f' chunks={chunks}' if algo == 'pipelined' else ''})"))
     # (c) projected v5e speedup from dry-run roofline
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                        "dryrun.json")

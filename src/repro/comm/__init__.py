@@ -1,0 +1,36 @@
+"""Topology-aware communication subsystem (docs/comm.md).
+
+Every collective in the repo lives here:
+
+  collectives   bf16-pinned differentiable leaf primitives (all_gather /
+                reduce_scatter / all_to_all) — moved from runtime/bfcoll
+  topology      factored-mesh model + per-hop wire cost model
+  hierarchical  2-hop intra-node/inter-node all-to-all (custom_vjp)
+  pipeline      chunked a2a double-buffered against expert compute
+  planner       trace-time selection: flat | hierarchical | pipelined per
+                collective from topology + message size + config override
+
+``planner.plan_collectives`` is the front door; core/moe.py routes its
+dispatch/combine a2a and FSDP weight gathers through the returned
+``CommPlan`` exclusively.
+"""
+from repro.comm.collectives import (all_gather_bf16, all_to_all_bf16,
+                                    reduce_scatter_bf16)
+from repro.comm.hierarchical import hierarchical_all_to_all_bf16
+from repro.comm.pipeline import (pipelined_all_to_all_bf16,
+                                 pipelined_moe_exchange)
+from repro.comm.planner import (ALGORITHMS, AUTO, FLAT, HIERARCHICAL,
+                                PIPELINED, CommPlan, flat_plan,
+                                plan_collectives)
+from repro.comm.topology import (Topology, a2a_cost, build_topology,
+                                 estimate_seconds, register_node_size)
+
+__all__ = [
+    "all_gather_bf16", "all_to_all_bf16", "reduce_scatter_bf16",
+    "hierarchical_all_to_all_bf16", "pipelined_all_to_all_bf16",
+    "pipelined_moe_exchange",
+    "ALGORITHMS", "AUTO", "FLAT", "HIERARCHICAL", "PIPELINED",
+    "CommPlan", "flat_plan", "plan_collectives",
+    "Topology", "a2a_cost", "build_topology", "estimate_seconds",
+    "register_node_size",
+]

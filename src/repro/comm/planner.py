@@ -1,0 +1,166 @@
+"""Collective planner: one trace-time resolution from (topology, message
+size, config) to a concrete transport per collective — the comm analogue
+of ``kernels/dispatch.resolve_backends``.
+
+``plan_collectives`` is called once per step (outside shard_map, at trace
+time) and returns a ``CommPlan`` whose methods are the ONLY entry points
+core/moe.py uses for the dispatch/combine all-to-all and the FSDP weight
+gathers — no call site reaches for ``lax.all_to_all`` or a raw bf16
+primitive directly.
+
+Selection order (docs/comm.md):
+  1. explicit ``CommConfig.a2a_impl`` (anything but "auto"),
+  2. ``$REPRO_COMM_IMPL``,
+  3. auto heuristic: pipelined when overlap_chunks > 1 and the slot axis
+     chunks evenly; else hierarchical when the wire axis node-factors AND
+     the message clears ``min_hierarchical_bytes``; else flat.
+Whatever is selected is then *validated against the actual mesh* and
+degraded to flat when it cannot run (unfactorable axis, indivisible chunk
+extent, axis of size 1) — ``CommPlan.reason`` records why, for logs and
+the table3 ablation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.comm import topology as topo_lib
+from repro.comm.collectives import (all_gather_bf16, all_to_all_bf16,
+                                    reduce_scatter_bf16)
+from repro.comm.hierarchical import (hierarchical_all_to_all_bf16,
+                                     hierarchical_moe_exchange)
+from repro.comm.pipeline import (pipelined_all_to_all_bf16,
+                                 pipelined_moe_exchange)
+from repro.comm.topology import Topology, build_topology
+
+FLAT = "flat"
+HIERARCHICAL = "hierarchical"
+PIPELINED = "pipelined"
+AUTO = "auto"
+ALGORITHMS = (FLAT, HIERARCHICAL, PIPELINED)
+ENV_VAR = "REPRO_COMM_IMPL"
+
+
+@dataclass(frozen=True)
+class CommPlan:
+    """Resolved transport for one step's collectives (static; close over it
+    freely inside shard_map bodies)."""
+    algorithm: str                      # one of ALGORITHMS (post-degrade)
+    axis_name: str                      # the wire axis ("model")
+    intra: int                          # node-local width (hierarchical)
+    chunks: int                         # slot chunks (pipelined)
+    reason: str                         # how/why this algorithm was picked
+    topology: Topology
+
+    # -- collectives (inside shard_map bodies) ----------------------------
+
+    def all_to_all(self, x, split: int = 0, concat: int = 0):
+        """Planned a2a of x: [R, ...] over the wire axis.  Hierarchical
+        requires the node-major split=concat=0 layout; other layouts fall
+        through to flat."""
+        if self.algorithm == HIERARCHICAL and split == 0 and concat == 0:
+            return hierarchical_all_to_all_bf16(x, self.axis_name,
+                                                self.intra)
+        if self.algorithm == PIPELINED and x.ndim > 2:
+            return pipelined_all_to_all_bf16(x, self.axis_name, split,
+                                             concat, self.chunks)
+        return all_to_all_bf16(x, self.axis_name, split, concat)
+
+    def all_gather(self, x, axis_name: str, axis: int, g: int):
+        """bf16-pinned tiled all-gather (FSDP weight gathers); transpose is
+        a reduce-scatter, ZeRO-2 gradient sharding for free."""
+        return all_gather_bf16(x, axis_name, axis, g)
+
+    def reduce_scatter(self, x, axis_name: str, axis: int, g: int):
+        return reduce_scatter_bf16(x, axis_name, axis, g)
+
+    def moe_exchange(self, send, compute_fn: Callable):
+        """dispatch a2a -> compute_fn -> combine a2a on the wire tensor
+        send: [R, e_local, c, H].  compute_fn maps a received chunk (full
+        tensor, or a slot-chunk of it on the pipelined path) to the same
+        shape — the per-token expert MLP."""
+        if self.algorithm == PIPELINED:
+            return pipelined_moe_exchange(send, compute_fn, self.axis_name,
+                                          self.chunks)
+        if self.algorithm == HIERARCHICAL:
+            return hierarchical_moe_exchange(send, compute_fn,
+                                             self.axis_name, self.intra)
+        recv = all_to_all_bf16(send, self.axis_name, 0, 0)
+        return all_to_all_bf16(compute_fn(recv), self.axis_name, 0, 0)
+
+    # -- diagnostics ------------------------------------------------------
+
+    def wire_cost(self, msg_bytes: float):
+        """Modeled per-hop cost of one planned a2a (topology cost model)."""
+        return topo_lib.a2a_cost(self.topology, self.axis_name, msg_bytes,
+                                 self.algorithm, chunks=self.chunks)
+
+
+def _validate(name: str) -> str:
+    if name not in ALGORITHMS + (AUTO,):
+        raise ValueError(f"unknown comm algorithm {name!r}; "
+                         f"available: {sorted(ALGORITHMS + (AUTO,))}")
+    return name
+
+
+def plan_collectives(mesh=None, comm=None, *, axis_name: str = "model",
+                     msg_bytes: int = 0, chunk_extent: int = 0,
+                     topology: Optional[Topology] = None) -> CommPlan:
+    """Resolve the transport for this step's collectives (trace time).
+
+    ``comm`` is a ``configs.base.CommConfig`` (None = defaults);
+    ``msg_bytes`` the per-rank wire-buffer size feeding the auto
+    heuristic; ``chunk_extent`` the slot-axis length the pipelined path
+    would chunk.  Pass ``topology`` to bypass mesh inspection (tests)."""
+    from repro.configs.base import CommConfig
+    comm = comm or CommConfig()
+    topo = topology if topology is not None else build_topology(
+        mesh, axis_name=axis_name, node_size=comm.node_size)
+    if topology is not None and comm.node_size:
+        topo = dataclasses.replace(topo, node_size=comm.node_size)
+
+    requested = _validate(comm.a2a_impl or AUTO)
+    reason = f"config a2a_impl={requested!r}"
+    if requested == AUTO:
+        requested = _validate(os.environ.get(ENV_VAR, AUTO) or AUTO)
+        reason = f"${ENV_VAR}={requested!r}"
+    chunks = max(1, int(comm.overlap_chunks))
+    chunkable = chunks > 1 and chunk_extent > 0 \
+        and chunk_extent % chunks == 0
+    if requested == AUTO:
+        if chunkable:
+            requested, reason = PIPELINED, \
+                f"auto: overlap_chunks={chunks} divides slot axis"
+        elif topo.can_factor(axis_name) \
+                and msg_bytes >= comm.min_hierarchical_bytes:
+            requested, reason = HIERARCHICAL, (
+                f"auto: axis factors {topo.factor(axis_name)} and "
+                f"msg {msg_bytes}B >= {comm.min_hierarchical_bytes}B")
+        else:
+            requested, reason = FLAT, "auto: no hierarchy/overlap to exploit"
+
+    # -- degrade whatever cannot run on this mesh to flat -----------------
+    r = topo.axis_size(axis_name)
+    inter, intra = topo.factor(axis_name)
+    if r <= 1 and requested != FLAT:
+        requested, reason = FLAT, f"degraded: axis {axis_name!r} has size 1"
+    elif requested == HIERARCHICAL and not topo.can_factor(axis_name):
+        requested, reason = FLAT, (
+            f"degraded: axis {axis_name!r} (size {r}) does not factor at "
+            f"node_size={topo.node_size}")
+    elif requested == PIPELINED and not chunkable:
+        requested, reason = FLAT, (
+            f"degraded: overlap_chunks={chunks} cannot chunk slot axis "
+            f"of {chunk_extent}")
+    return CommPlan(algorithm=requested, axis_name=axis_name, intra=intra,
+                    chunks=chunks if requested == PIPELINED else 1,
+                    reason=reason, topology=topo)
+
+
+def flat_plan(axis_name: str = "model") -> CommPlan:
+    """A degenerate always-flat plan (single-device tests, decode)."""
+    return CommPlan(FLAT, axis_name, intra=1, chunks=1,
+                    reason="flat_plan()",
+                    topology=Topology(axis_sizes=((axis_name, 1),)))

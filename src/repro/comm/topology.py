@@ -1,0 +1,172 @@
+"""Factored-mesh topology model + per-hop wire cost model.
+
+A ``Mesh`` names logical axes but says nothing about which links carry
+them.  ``Topology`` adds the one physical fact the comm planner needs: how
+many devices along the wire axis share a node (= the fast intra-node
+interconnect), so an axis of size R factors into
+
+    R = inter * intra        (ranks node-major: rank = node * intra + local)
+
+and an all-to-all over it can be decomposed into an intra-node hop at ICI
+bandwidth followed by an inter-node hop that moves fewer, larger messages
+over the slow links (comm/hierarchical.py; MegaScale-MoE, arXiv
+2505.11432).
+
+Node-size resolution (first hit wins):
+  1. ``CommConfig.node_size`` (explicit per-model override),
+  2. ``$REPRO_NODE_SIZE``,
+  3. the hint registered at mesh construction (``register_node_size`` —
+     launch/mesh.py records the machine shape it built the mesh for),
+  4. process-locality of the mesh's own devices along the wire axis.
+
+The cost model is intentionally the same altitude as launch/hlo_analysis:
+per-hop ``bytes / bandwidth + messages * latency``, good for ranking
+algorithms and for the table3 comm ablation, not for absolute numbers.
+"""
+from __future__ import annotations
+
+import os
+import weakref
+from dataclasses import dataclass, field
+from typing import Tuple
+
+# Link constants (bytes/s, s).  Intra = ICI/NVLink-class; inter = the
+# slower DCN/host link.  b_inter matches the v5e constant benchmarks use.
+DEFAULT_INTRA_BW = 4.5e11
+DEFAULT_INTER_BW = 5.0e10
+DEFAULT_INTRA_LAT = 1e-6
+DEFAULT_INTER_LAT = 25e-6
+
+ENV_NODE_SIZE = "REPRO_NODE_SIZE"
+
+# Mesh-construction hints: launch/mesh.py registers the node size it built
+# the mesh for; keyed by the Mesh itself (hashable, eq by devices+axes).
+# Weak keys so the registry never pins dead meshes in long-lived processes.
+_NODE_HINTS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def register_node_size(mesh, node_size: int) -> None:
+    """Record the devices-per-node hint for a mesh (launch/mesh.py)."""
+    if node_size > 0:
+        _NODE_HINTS[mesh] = int(node_size)
+
+
+def node_size_hint(mesh) -> int:
+    return _NODE_HINTS.get(mesh, 0)
+
+
+def _detect_from_devices(mesh, axis_name: str) -> int:
+    """Run length of the first process along the wire axis: on multi-host
+    platforms consecutive mesh columns on one process share the node."""
+    try:
+        devs = mesh.devices
+        axis = list(mesh.axis_names).index(axis_name)
+        lane = devs.transpose(
+            [axis] + [i for i in range(devs.ndim) if i != axis]
+        ).reshape(devs.shape[axis], -1)[:, 0]
+        first = lane[0].process_index
+        run = 0
+        for d in lane:
+            if d.process_index != first:
+                break
+            run += 1
+        return run if 0 < run < len(lane) else 0
+    except Exception:
+        return 0
+
+
+@dataclass(frozen=True)
+class Topology:
+    """Axis sizes + devices-per-node along the wire axis (+ link model)."""
+    axis_sizes: Tuple[Tuple[str, int], ...]
+    node_size: int = 0                  # 0 = unknown -> nothing factors
+    intra_bw: float = DEFAULT_INTRA_BW
+    inter_bw: float = DEFAULT_INTER_BW
+    intra_lat: float = DEFAULT_INTRA_LAT
+    inter_lat: float = DEFAULT_INTER_LAT
+
+    def axis_size(self, name: str) -> int:
+        return dict(self.axis_sizes).get(name, 1)
+
+    def factor(self, axis_name: str) -> Tuple[int, int]:
+        """(inter, intra) factorisation of the axis; (1, R) when the axis
+        fits in a node or the node size doesn't divide it."""
+        r = self.axis_size(axis_name)
+        n = self.node_size
+        if n <= 1 or n >= r or r % n:
+            return 1, r
+        return r // n, n
+
+    def can_factor(self, axis_name: str) -> bool:
+        return self.factor(axis_name)[0] > 1
+
+
+def build_topology(mesh, *, axis_name: str = "model",
+                   node_size: int = 0) -> Topology:
+    """Topology for ``mesh`` with the node-size resolution order above.
+    ``node_size`` is the CommConfig override (0 = fall through)."""
+    sizes = tuple((a, int(mesh.shape[a])) for a in mesh.axis_names)
+    n = int(node_size)
+    if n <= 0:
+        n = int(os.environ.get(ENV_NODE_SIZE, "0") or 0)
+    if n <= 0:
+        n = node_size_hint(mesh)
+    if n <= 0:
+        n = _detect_from_devices(mesh, axis_name)
+    return Topology(axis_sizes=sizes, node_size=n)
+
+
+# ------------------------------------------------------------ cost model --
+
+@dataclass(frozen=True)
+class HopCost:
+    hop: str                            # "intra" | "inter"
+    messages: int                       # per-rank message count
+    bytes: float                        # per-rank bytes over this hop
+    seconds: float = field(default=0.0)
+
+
+def _hop(topo: Topology, hop: str, messages: int, nbytes: float) -> HopCost:
+    bw = topo.intra_bw if hop == "intra" else topo.inter_bw
+    lat = topo.intra_lat if hop == "intra" else topo.inter_lat
+    return HopCost(hop, messages, nbytes,
+                   seconds=messages * lat + nbytes / bw)
+
+
+def a2a_cost(topo: Topology, axis_name: str, msg_bytes: float,
+             algorithm: str, *, chunks: int = 1) -> Tuple[HopCost, ...]:
+    """Per-rank, per-hop cost of one all-to-all of a ``msg_bytes`` local
+    buffer over ``axis_name``.
+
+      flat          (R-1) direct messages of msg/R bytes; the (R-intra)
+                    off-node ones cross the slow link.
+      hierarchical  hop 1: intra a2a over `intra` ranks (fast links);
+                    hop 2: inter a2a over `inter` node-leaders — the slow
+                    link now carries (inter-1) large messages instead of
+                    (R-intra) small ones (same total bytes, ~intra x fewer
+                    messages).
+      pipelined     flat decomposition with every message split K ways;
+                    bytes unchanged, message count x K — the win (overlap
+                    with compute) is not visible to a wire-only model.
+    """
+    r = topo.axis_size(axis_name)
+    if r <= 1:
+        return ()
+    inter, intra = topo.factor(axis_name)
+    k = max(1, chunks) if algorithm == "pipelined" else 1
+    if algorithm == "hierarchical" and inter > 1:
+        return (_hop(topo, "intra", (intra - 1),
+                     msg_bytes * (intra - 1) / intra),
+                _hop(topo, "inter", (inter - 1),
+                     msg_bytes * (inter - 1) / inter))
+    on_node = min(intra, r) - 1
+    off_node = r - 1 - on_node
+    hops = [_hop(topo, "intra", on_node * k, msg_bytes * on_node / r)]
+    if off_node:
+        hops.append(_hop(topo, "inter", off_node * k,
+                         msg_bytes * off_node / r))
+    return tuple(h for h in hops if h.messages > 0)
+
+
+def estimate_seconds(costs: Tuple[HopCost, ...]) -> float:
+    return sum(c.seconds for c in costs)

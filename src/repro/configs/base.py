@@ -37,6 +37,27 @@ class LSHConfig:
 
 
 @dataclass(frozen=True)
+class CommConfig:
+    """Topology-aware collective planning (src/repro/comm/; docs/comm.md).
+
+    The MoE all-to-all is planned once per step by ``comm.planner``:
+    ``a2a_impl`` selects the transport (explicit name > $REPRO_COMM_IMPL >
+    auto heuristic from topology + message size), degrading to ``flat``
+    whenever the requested algorithm cannot run on the actual mesh."""
+    a2a_impl: str = "auto"        # auto | flat | hierarchical | pipelined
+    # Devices per node along the wire (`model`) axis.  0 = detect:
+    # $REPRO_NODE_SIZE, else the mesh-construction hint (launch/mesh.py),
+    # else process-locality of the mesh devices.
+    node_size: int = 0
+    # Pipelined path: number of slot-axis chunks whose transfer overlaps
+    # the previous chunk's expert-MLP compute.  1 = no chunking.
+    overlap_chunks: int = 1
+    # Auto heuristic: hierarchical only pays off above this message size
+    # (the 2-hop stages a full extra intra-node copy of the buffer).
+    min_hierarchical_bytes: int = 1 << 20
+
+
+@dataclass(frozen=True)
 class MoEConfig:
     num_experts: int = 0
     top_k: int = 2
@@ -53,6 +74,9 @@ class MoEConfig:
     # with op one of kernels.dispatch.OPS — e.g. force just the scatter back
     # to "reference" while bisecting a kernel regression.
     kernel_backend_overrides: Tuple[Tuple[str, str], ...] = ()
+    # Collective transport planning for the dispatch/combine all-to-all and
+    # the FSDP weight gathers (comm/planner.py; docs/comm.md).
+    comm: CommConfig = field(default_factory=CommConfig)
 
 
 @dataclass(frozen=True)

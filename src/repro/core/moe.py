@@ -11,11 +11,14 @@ combine) dispatched through the kernel backend registry
 
 1. ``moe_expert_parallel`` — the paper's setting (train / prefill): a
    ``shard_map`` region over the mesh in which the plan's dispatch buffer
-   is optionally LSH-compressed (core/clustering), exchanged via
-   ``jax.lax.all_to_all`` over the `model` axis (= expert parallelism),
-   processed by the local experts, exchanged back, and error-compensated.
-   The *compressed* tensor is the only thing crossing the wire — the
-   collective operand shrinks by the configured rate.
+   is optionally LSH-compressed (core/clustering), exchanged over the
+   `model` axis (= expert parallelism), processed by the local experts,
+   exchanged back, and error-compensated.  The *compressed* tensor is the
+   only thing crossing the wire — the collective operand shrinks by the
+   configured rate.  The transport itself (flat | hierarchical 2-hop |
+   chunk-pipelined a2a, plus the FSDP weight gathers) is selected once
+   per step by ``comm.planner.plan_collectives`` from mesh topology +
+   message size + ``cfg.comm`` — this module never calls a raw collective.
 
 2. ``moe_dense_dispatch`` — decode path: token counts are tiny, so the
    plan is consumed without shard_map or collectives (GSPMD partitions the
@@ -35,6 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.comm import planner as comm_planner
 from repro.compat import shard_map
 from repro.configs.base import MoEConfig
 from repro.core import clustering, routing
@@ -91,7 +95,8 @@ def _expert_mlp(tok, w_gate, w_up, w_down, mlp_act: str):
 
 def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
                cfg: MoEConfig, mesh: Mesh, mlp_act: str, e_pad: int,
-               capacity: int, use_lsh: bool, wire_dtype, kernel_backend):
+               capacity: int, use_lsh: bool, wire_dtype, kernel_backend,
+               cplan: comm_planner.CommPlan):
     """Per-device body. x: [B_loc, S_loc, H]."""
     model_r = axis_size(mesh, "model")
     e_local = e_pad // model_r
@@ -116,24 +121,29 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
     else:
         comp, wire, c_wire = None, disp, capacity
 
-    # ---- all-to-all #1 (the compressed tensor is what crosses the wire) --
-    from repro.runtime.bfcoll import all_gather_bf16, all_to_all_bf16
+    # ---- wire exchange: dispatch a2a -> expert MLP -> combine a2a, with
+    # the transport (flat | hierarchical | pipelined) picked by the plan.
+    # The compressed tensor is the only thing that crosses the wire.
     data_r = axis_size(mesh, "data")
     wire = wire.astype(wire_dtype)
     send = wire.reshape(model_r, e_local, c_wire, H)
-    recv = all_to_all_bf16(send, "model", 0, 0)           # [R, e_local, c', H]
-    # expert weights: FSDP all-gather over `data` (H axis)
-    wg = None if w_gate is None else all_gather_bf16(w_gate, "data", 1, data_r)
-    wu = all_gather_bf16(w_up, "data", 1, data_r)
-    wd = all_gather_bf16(w_down, "data", 1, data_r)
+    # expert weights: FSDP all-gather over `data` (H axis) — hoisted out of
+    # the (possibly chunked) exchange so they are gathered exactly once
+    wg = None if w_gate is None else cplan.all_gather(w_gate, "data", 1,
+                                                      data_r)
+    wu = cplan.all_gather(w_up, "data", 1, data_r)
+    wd = cplan.all_gather(w_down, "data", 1, data_r)
 
-    tok = recv.transpose(1, 0, 2, 3).reshape(e_local, model_r * c_wire, H)
-    out = _expert_mlp(tok.astype(x.dtype), wg, wu, wd, mlp_act)
+    def expert_chunk(recv):
+        """[R, e_local, ck, H] wire chunk -> same shape, through the local
+        experts (per-token MLP — any slot sub-range is valid)."""
+        r_, el, ck, h_ = recv.shape
+        tok = recv.transpose(1, 0, 2, 3).reshape(el, r_ * ck, h_)
+        out = _expert_mlp(tok.astype(x.dtype), wg, wu, wd, mlp_act)
+        return out.reshape(el, r_, ck, h_).transpose(1, 0, 2, 3) \
+                  .astype(wire_dtype)
 
-    # ---- all-to-all #2 (results return compressed) -----------------------
-    back = out.reshape(e_local, model_r, c_wire, H).transpose(1, 0, 2, 3)
-    back = back.astype(wire_dtype)
-    ret = all_to_all_bf16(back, "model", 0, 0)
+    ret = cplan.moe_exchange(send, expert_chunk)          # [R, e_local, c', H]
     expert_out = ret.reshape(e_pad, c_wire, H).astype(jnp.float32)
 
     if use_lsh:
@@ -173,6 +183,14 @@ def moe_expert_parallel(x: jax.Array, params: Dict, cfg: MoEConfig,
     use_lsh = cfg.lsh.enabled if use_lsh is None else use_lsh
     wire_dtype = jnp.dtype(cfg.lsh.wire_dtype) if use_lsh else x.dtype
     backend = _resolve_moe_backend(cfg, kernel_backend, lsh_active=use_lsh)
+    c_wire = num_lsh_slots(capacity, cfg.lsh.compression_rate) if use_lsh \
+        else capacity
+    # Transport resolution (flat | hierarchical | pipelined) happens HERE,
+    # once per traced step — _local_moe only consumes the plan.
+    cplan = comm_planner.plan_collectives(
+        mesh, cfg.comm, axis_name="model",
+        msg_bytes=e_pad * c_wire * H * wire_dtype.itemsize,
+        chunk_extent=c_wire)
 
     tok_spec = P(dp if len(dp) > 1 else (dp[0] if dp else None), "model", None)
     ew_spec = P("model", "data", None)
@@ -180,7 +198,7 @@ def moe_expert_parallel(x: jax.Array, params: Dict, cfg: MoEConfig,
 
     fn = partial(_local_moe, cfg=cfg, mesh=mesh, mlp_act=mlp_act,
                  e_pad=e_pad, capacity=capacity, use_lsh=use_lsh,
-                 wire_dtype=wire_dtype, kernel_backend=backend)
+                 wire_dtype=wire_dtype, kernel_backend=backend, cplan=cplan)
     y, aux, z, load = shard_map(
         fn, mesh=mesh,
         in_specs=(tok_spec, P(None, None),

@@ -1,7 +1,12 @@
 """Production mesh construction.
 
 Defined as FUNCTIONS so importing this module never touches jax device
-state (the dry-run sets XLA_FLAGS before any jax import)."""
+state (the dry-run sets XLA_FLAGS before any jax import).
+
+Each constructor also registers the machine's node topology (devices per
+node along the minor/`model` axis) with ``repro.comm.topology`` so the
+collective planner can factor the MoE all-to-all into intra-/inter-node
+hops without re-deriving the machine shape at trace time."""
 from __future__ import annotations
 
 import numpy as np
@@ -9,23 +14,38 @@ import numpy as np
 import jax
 from jax.sharding import Mesh
 
+from repro.comm.topology import register_node_size
 
-def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+# v5e: 4 chips share a host (the fast intra-node domain the 2-hop a2a
+# exploits); override per-model via CommConfig.node_size / $REPRO_NODE_SIZE.
+V5E_CHIPS_PER_HOST = 4
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         node_size: int = V5E_CHIPS_PER_HOST) -> Mesh:
     """Single pod: 16×16 = 256 chips (data, model).
     Multi-pod: 2×16×16 = 512 chips (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = int(np.prod(shape))
     if len(jax.devices()) == n:
-        return jax.make_mesh(shape, axes,
+        mesh = jax.make_mesh(shape, axes,
                              axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    # fewer/more devices than the full mesh: take a prefix (dry-run helper)
-    devs = np.array(jax.devices()[:n]).reshape(shape)
-    return Mesh(devs, axes)
+    else:
+        # fewer/more devices than the full mesh: a prefix (dry-run helper)
+        devs = np.array(jax.devices()[:n]).reshape(shape)
+        mesh = Mesh(devs, axes)
+    register_node_size(mesh, node_size)
+    return mesh
 
 
-def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
-    """Small mesh over however many (host) devices exist — tests/examples."""
+def make_host_mesh(data: int = 1, model: int = 1, *,
+                   node_size: int = 0) -> Mesh:
+    """Small mesh over however many (host) devices exist — tests/examples.
+    ``node_size`` simulates a node boundary along the model axis for the
+    hierarchical-a2a paths (0 = single-node: everything stays flat)."""
     n = data * model
     devs = np.array(jax.devices()[:n]).reshape(data, model)
-    return Mesh(devs, ("data", "model"))
+    mesh = Mesh(devs, ("data", "model"))
+    register_node_size(mesh, node_size)
+    return mesh

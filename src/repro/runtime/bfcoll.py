@@ -1,111 +1,10 @@
-"""Differentiable bf16-pinned collectives.
+"""DEPRECATED: moved to ``repro.comm.collectives``.
 
-``bitcast_convert_type`` has a zero gradient, so naively bitcasting around
-a collective silently kills the backward pass.  Each primitive here is a
-``jax.custom_vjp`` whose forward moves u16 words (no compiler pass can
-widen them to f32) and whose backward is the mathematically-correct
-transpose, also bf16-pinned:
-
-  all_gather   <-transpose->  reduce_scatter (scatter-addends a2a + local sum)
-  all_to_all   <-transpose->  all_to_all (block transpose, self-adjoint
-                              for split=concat)
-All functions are called INSIDE shard_map bodies.
+This shim keeps old import paths working one release; new code should go
+through ``repro.comm`` (the planner) or ``repro.comm.collectives`` (the
+raw bf16 primitives).  See docs/comm.md.
 """
-from __future__ import annotations
+from repro.comm.collectives import (all_gather_bf16,  # noqa: F401
+                                    all_to_all_bf16, reduce_scatter_bf16)
 
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-
-
-def _bits(x):
-    return jax.lax.bitcast_convert_type(x, jnp.uint16) \
-        if x.dtype == jnp.bfloat16 else x
-
-
-def _unbits(x, dtype):
-    return jax.lax.bitcast_convert_type(x, jnp.bfloat16) \
-        if dtype == jnp.bfloat16 else x
-
-
-def _raw_ag(x, axis_name, axis):
-    b = jax.lax.optimization_barrier(_bits(x))
-    out = jax.lax.all_gather(b, axis_name, axis=axis, tiled=True)
-    return _unbits(out, x.dtype)
-
-
-def _raw_rs(x, axis_name, axis, g):
-    """reduce_scatter(sum) along `axis` via scatter-addends all_to_all."""
-    shape = x.shape
-    n = shape[axis]
-    xs = x.reshape(shape[:axis] + (g, n // g) + shape[axis + 1:])
-    b = jax.lax.optimization_barrier(_bits(xs))
-    got = jax.lax.all_to_all(b, axis_name, split_axis=axis,
-                             concat_axis=axis, tiled=False)
-    got = _unbits(got, x.dtype)
-    return got.astype(jnp.float32).sum(axis=axis).astype(x.dtype)
-
-
-def _raw_a2a(x, axis_name, split, concat):
-    b = jax.lax.optimization_barrier(_bits(x))
-    out = jax.lax.all_to_all(b, axis_name, split_axis=split,
-                             concat_axis=concat, tiled=False)
-    return _unbits(out, x.dtype)
-
-
-# ---------------------------------------------------------------- gather --
-
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
-def all_gather_bf16(x, axis_name: str, axis: int, g: int):
-    """[..., n, ...] -> [..., n*g, ...] over `axis_name` (tiled)."""
-    return _raw_ag(x, axis_name, axis)
-
-
-def _ag_fwd(x, axis_name, axis, g):
-    return _raw_ag(x, axis_name, axis), None
-
-
-def _ag_bwd(axis_name, axis, g, _, ct):
-    return (_raw_rs(ct.astype(ct.dtype), axis_name, axis, g),)
-
-
-all_gather_bf16.defvjp(_ag_fwd, _ag_bwd)
-
-
-# -------------------------------------------------------- reduce scatter --
-
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
-def reduce_scatter_bf16(x, axis_name: str, axis: int, g: int):
-    """Sum partials over `axis_name`, scatter along `axis` (tiled)."""
-    return _raw_rs(x, axis_name, axis, g)
-
-
-def _rs_fwd(x, axis_name, axis, g):
-    return _raw_rs(x, axis_name, axis, g), None
-
-
-def _rs_bwd(axis_name, axis, g, _, ct):
-    return (_raw_ag(ct, axis_name, axis),)
-
-
-reduce_scatter_bf16.defvjp(_rs_fwd, _rs_bwd)
-
-
-# -------------------------------------------------------------- all2all ---
-
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
-def all_to_all_bf16(x, axis_name: str, split: int, concat: int):
-    return _raw_a2a(x, axis_name, split, concat)
-
-
-def _a2a_fwd(x, axis_name, split, concat):
-    return _raw_a2a(x, axis_name, split, concat), None
-
-
-def _a2a_bwd(axis_name, split, concat, _, ct):
-    # transpose of all_to_all swaps split/concat
-    return (_raw_a2a(ct, axis_name, concat, split),)
-
-
-all_to_all_bf16.defvjp(_a2a_fwd, _a2a_bwd)
+__all__ = ["all_gather_bf16", "reduce_scatter_bf16", "all_to_all_bf16"]

@@ -73,7 +73,7 @@ def sp_gather(x: jax.Array, mesh: Mesh) -> jax.Array:
         return constrain(x, mesh, "batch", None, None)
     dp = _dp_spec(mesh)
 
-    from repro.runtime.bfcoll import all_gather_bf16
+    from repro.comm.collectives import all_gather_bf16
 
     def local(xl):
         return all_gather_bf16(xl, "model", 1, g)
@@ -107,7 +107,7 @@ def tp_in_project(x: jax.Array, ws: Sequence[jax.Array], mesh: Mesh,
         return tuple(x @ w for w in ws)
     dp = _dp_spec(mesh)
     rep = tuple(replicate) + (False,) * (len(ws) - len(replicate))
-    from repro.runtime.bfcoll import all_gather_bf16
+    from repro.comm.collectives import all_gather_bf16
     d = max(1, mesh.shape.get("data", 1))
 
     def local(xl, *wls):
@@ -144,7 +144,7 @@ def tp_project(y: jax.Array, w: jax.Array, mesh: Mesh) -> jax.Array:
         return constrain(out.astype(y.dtype), mesh, "batch", "seq", None)
     dp = _dp_spec(mesh)
 
-    from repro.runtime.bfcoll import all_gather_bf16, reduce_scatter_bf16
+    from repro.comm.collectives import all_gather_bf16, reduce_scatter_bf16
     d = max(1, mesh.shape.get("data", 1))
 
     def local(yl, wl):
