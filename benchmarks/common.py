@@ -27,11 +27,14 @@ def bench_mesh() -> Mesh:
 def tiny_moe_config(*, lsh: bool = True, num_hashes: int = 6,
                     rate: float = 0.2, hash_type: str = "cross_polytope",
                     compensation: bool = True,
-                    kernel_backend: str = "auto") -> ModelConfig:
+                    kernel_backend: str = "auto",
+                    wire_format: str = "bf16") -> ModelConfig:
     """RoBERTa-MoE-shaped (scaled down): alternating dense/MoE FFN layers,
     16 experts — the paper's §4.2 substitution pattern.  ``kernel_backend``
-    selects the compress/decompress implementation (kernels/dispatch.py) —
-    an ablation axis for table3/fig7."""
+    selects the compress/decompress implementation (kernels/dispatch.py)
+    and ``wire_format`` the on-wire representation of the compressed
+    exchange (bf16 | int8 | fp8, comm/wire.py) — ablation axes for
+    table3/fig7."""
     return ModelConfig(
         name="bench-roberta-moe", family="moe", d_model=64, num_heads=4,
         num_kv_heads=4, d_ff=128, vocab_size=512,
@@ -43,6 +46,7 @@ def tiny_moe_config(*, lsh: bool = True, num_hashes: int = 6,
                                     rotation_dim=32,
                                     compression_rate=rate,
                                     hash_type=hash_type,
+                                    wire_format=wire_format,
                                     error_compensation=compensation)),
         remat_policy="dots", q_chunk=32, kv_chunk=32)
 

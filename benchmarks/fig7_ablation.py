@@ -1,7 +1,8 @@
 """Paper Figure 7 ablations: hash-count sweep {2,4,6,8,10}, hash-type
-sweep (cross-polytope vs spherical), and kernel-backend sweep
-(reference vs pallas_interpret dispatch) — compression rate + converged
-loss per axis."""
+sweep (cross-polytope vs spherical), kernel-backend sweep (reference vs
+pallas_interpret dispatch), and wire-format sweep (bf16 vs int8 vs fp8
+quantized a2a payload) — compression rate / wire bytes + converged loss
+per axis."""
 from __future__ import annotations
 
 import numpy as np
@@ -48,6 +49,28 @@ def run(out_rows, steps: int = 40):
         loss = float(np.mean(res["losses"][-8:]))
         out_rows.append((f"fig7/backend_{backend}", loss * 1e6,
                          f"loss={loss:.4f}"))
+    # wire-format axis: the quantized a2a payloads must converge at bf16
+    # parity (residuals absorb the dispatch-leg quantization error; the
+    # combine leg mirrors bf16's own rounding).  Reported next to the
+    # true wire bytes of the exchange the losses were measured on (the
+    # tiny config's actual capacity/slot geometry at train_curve's
+    # batch=8, seq=64 shape) so the loss/bytes trade-off reads off one
+    # table.
+    from repro.core.moe import expert_capacity, num_lsh_slots
+    batch, seq = 8, 64                             # passed to train_curve
+    cfg0 = tiny_moe_config(lsh=True)
+    e_pad = cfg0.moe.num_experts                   # 1-wide model axis
+    cap = expert_capacity(batch * seq, e_pad, cfg0.moe.top_k,
+                          cfg0.moe.capacity_factor)
+    slots = num_lsh_slots(cap, cfg0.moe.lsh.compression_rate,
+                          multiple=cfg0.moe.comm.overlap_chunks)
+    for fmt in ("bf16", "int8", "fp8"):
+        res = train_curve(tiny_moe_config(lsh=True, wire_format=fmt), steps,
+                          batch=batch, seq=seq)
+        loss = float(np.mean(res["losses"][-8:]))
+        wb = clustering.wire_bytes(e_pad, slots, cfg0.d_model, fmt)
+        out_rows.append((f"fig7/wire_{fmt}", loss * 1e6,
+                         f"loss={loss:.4f},wire_KiB={wb / 1024:.1f}"))
     return out_rows
 
 

@@ -9,11 +9,15 @@ from the roofline terms (collective term scaled by the configured rate);
 per dispatch backend (reference vs pallas_interpret; pallas_tpu on TPU);
 (e) routing cost — DispatchPlan build + dispatch/combine wall clock per
 backend, so the dispatch-layer term is separable from the all-to-all
-term in the fig7 ablation; (f) comm-algorithm ablation — modeled wire
-bytes/messages per hop (repro.comm.topology cost model) for the
-production wire tensor under flat | hierarchical | pipelined transports,
-with LSH on and off, so the transport choice is attributable separately
-from the payload compression."""
+term in the fig7 ablation; (f) comm-algorithm x wire-format ablation —
+modeled wire bytes/messages per hop (repro.comm.topology cost model,
+message sizes from clustering.wire_bytes so the scales sidecar is
+counted) for the production wire tensor under flat | hierarchical |
+pipelined transports x bf16 | int8 | fp8 formats, with LSH on and off,
+so transport choice, payload compression and wire quantization are each
+attributable separately; (g) measured step time + final loss per wire
+format on this host (quantize/dequantize compute cost; the byte savings
+only pay off on real interconnects)."""
 from __future__ import annotations
 
 import json
@@ -101,12 +105,15 @@ def run(out_rows, steps: int = 20):
         out_rows.append((f"table3/routing_{b}_ms", dt * 1e9,
                          f"plan+dispatch+combine={dt * 1e3:.2f}ms "
                          f"(T={T} k={k} E={E} C={C} H={H})"))
-    # (f) comm-algorithm ablation: the production wire tensor (qwen3-ish
-    # EP layer on the 16x16 mesh, node_size=4 hosts) through the topology
-    # cost model — per-hop modeled bytes/messages and total seconds for
-    # each transport x LSH setting.  LSH shrinks every hop's payload by
-    # the configured rate; hierarchical shrinks the number of slow-link
-    # messages; pipelined trades messages for overlap.
+    # (f) comm-algorithm x wire-format ablation: the production wire
+    # tensor (qwen3-ish EP layer on the 16x16 mesh, node_size=4 hosts)
+    # through the topology cost model — per-hop modeled bytes/messages
+    # and total seconds for each transport x LSH x wire format.  LSH
+    # shrinks every hop's payload by the configured rate, the quantized
+    # formats by ~2x more (scales sidecar included via
+    # clustering.wire_bytes — the SAME accounting core/moe.py feeds the
+    # planner); hierarchical shrinks the number of slow-link messages;
+    # pipelined trades messages for overlap.
     from repro.comm import topology as comm_topo
     from repro.core.moe import num_lsh_slots
     topo = comm_topo.Topology(axis_sizes=(("data", 16), ("model", 16)),
@@ -114,19 +121,34 @@ def run(out_rows, steps: int = 20):
     e_pad, cap, h, chunks = 64, 512, 2048, 4
     for use_lsh in (False, True):
         c_wire = num_lsh_slots(cap, 0.2) if use_lsh else cap
-        msg = e_pad * c_wire * h * 2                   # bf16 wire
-        for algo in ("flat", "hierarchical", "pipelined"):
-            costs = comm_topo.a2a_cost(topo, "model", msg, algo,
-                                       chunks=chunks)
-            total = comm_topo.estimate_seconds(costs)
-            hops = " ".join(
-                f"{c.hop}={c.bytes / 2**20:.1f}MiB/{c.messages}msg"
-                for c in costs)
-            out_rows.append(
-                (f"table3/comm_{algo}_lsh{int(use_lsh)}_us", total * 1e12,
-                 f"modeled_a2a={total * 1e6:.1f}us {hops} "
-                 f"(msg={msg / 2**20:.1f}MiB"
-                 f"{f' chunks={chunks}' if algo == 'pipelined' else ''})"))
+        formats = ("bf16", "int8", "fp8") if use_lsh else ("bf16",)
+        for fmt in formats:
+            msg = clustering.wire_bytes(e_pad, c_wire, h,
+                                        fmt if use_lsh else None)
+            for algo in ("flat", "hierarchical", "pipelined"):
+                costs = comm_topo.a2a_cost(topo, "model", msg, algo,
+                                           chunks=chunks)
+                total = comm_topo.estimate_seconds(costs)
+                hops = " ".join(
+                    f"{c.hop}={c.bytes / 2**20:.1f}MiB/{c.messages}msg"
+                    for c in costs)
+                out_rows.append(
+                    (f"table3/comm_{algo}_lsh{int(use_lsh)}_{fmt}_us",
+                     total * 1e12,
+                     f"modeled_a2a={total * 1e6:.1f}us {hops} "
+                     f"(msg={msg / 2**20:.1f}MiB"
+                     f"{f' chunks={chunks}' if algo == 'pipelined' else ''})"))
+    # (g) measured wire-format axis on this host: step wall clock + final
+    # loss per format (CPU measures the quantize/dequantize compute cost;
+    # losses must stay at bf16 parity — the byte savings show up in (f))
+    for fmt in ("bf16", "int8", "fp8"):
+        res = train_curve(tiny_moe_config(lsh=True, wire_format=fmt), steps)
+        loss = float(np.mean(res["losses"][-5:]))
+        out_rows.append(
+            (f"table3/wire_{fmt}_step_ms",
+             res["wall_s"] / max(1, steps) * 1e9,
+             f"step={res['wall_s'] / max(1, steps) * 1e3:.1f}ms "
+             f"loss={loss:.4f}"))
     # (c) projected v5e speedup from dry-run roofline
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                        "dryrun.json")

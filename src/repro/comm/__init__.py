@@ -7,6 +7,8 @@ Every collective in the repo lives here:
   topology      factored-mesh model + per-hop wire cost model
   hierarchical  2-hop intra-node/inter-node all-to-all (custom_vjp)
   pipeline      chunked a2a double-buffered against expert compute
+  wire          on-wire representation (bf16 | int8 | fp8 + scales
+                sidecar) with a straight-through coded transfer
   planner       trace-time selection: flat | hierarchical | pipelined per
                 collective from topology + message size + config override
 
@@ -24,8 +26,11 @@ from repro.comm.planner import (ALGORITHMS, AUTO, FLAT, HIERARCHICAL,
                                 plan_collectives)
 from repro.comm.topology import (Topology, a2a_cost, build_topology,
                                  estimate_seconds, register_node_size)
+from repro.comm.wire import (WIRE_FORMATS, WireCodec, coded_transfer,
+                             make_codec)
 
 __all__ = [
+    "WIRE_FORMATS", "WireCodec", "coded_transfer", "make_codec",
     "all_gather_bf16", "all_to_all_bf16", "reduce_scatter_bf16",
     "hierarchical_all_to_all_bf16", "pipelined_all_to_all_bf16",
     "pipelined_moe_exchange",

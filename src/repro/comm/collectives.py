@@ -24,14 +24,24 @@ import jax
 import jax.numpy as jnp
 
 
+# Sub-f32 dtypes travel as integer words so no compiler pass can widen
+# the wire: bf16 -> u16, fp8 (quantized wire payload, comm/wire.py) -> u8.
+# int8 payloads are already integer words and pass through untouched.
+_WORD_DTYPES = {jnp.dtype(jnp.bfloat16): jnp.uint16}
+if hasattr(jnp, "float8_e4m3fn"):
+    _WORD_DTYPES[jnp.dtype(jnp.float8_e4m3fn)] = jnp.uint8
+if hasattr(jnp, "float8_e5m2"):
+    _WORD_DTYPES[jnp.dtype(jnp.float8_e5m2)] = jnp.uint8
+
+
 def _bits(x):
-    return jax.lax.bitcast_convert_type(x, jnp.uint16) \
-        if x.dtype == jnp.bfloat16 else x
+    word = _WORD_DTYPES.get(jnp.dtype(x.dtype))
+    return x if word is None else jax.lax.bitcast_convert_type(x, word)
 
 
 def _unbits(x, dtype):
-    return jax.lax.bitcast_convert_type(x, jnp.bfloat16) \
-        if dtype == jnp.bfloat16 else x
+    return x if jnp.dtype(dtype) not in _WORD_DTYPES \
+        else jax.lax.bitcast_convert_type(x, dtype)
 
 
 def _raw_ag(x, axis_name, axis):

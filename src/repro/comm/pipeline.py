@@ -10,6 +10,19 @@ iteration k issues the dispatch a2a for chunk k AND the MLP + combine a2a
 for chunk k-1 with no data dependence between the two, so the scheduler
 can overlap chunk-k transfer with chunk-(k-1) compute.
 
+The per-chunk transport is pluggable (``transfer=``): the planner passes
+a ``comm.wire.coded_transfer`` when a quantized wire format is active, so
+each chunk is sliced from the FLOAT tensor and encoded in transit — the
+int8/fp8 payload and its scales sidecar are chunked in lockstep by
+construction (quantization is per-slot, so encode commutes with slot
+slicing and chunked results stay bit-identical to the unchunked path).
+
+A chunk count that does not divide the slot extent RAISES here: the
+planner validates divisibility at plan time (core/moe.py pads the slot
+count so configured overlap_chunks divide) and degrades to flat with a
+logged reason otherwise, so reaching this module with an indivisible
+chunking is a planning bug, not a runtime condition to paper over.
+
 ``pipelined_all_to_all_bf16`` is the bare chunked transfer (no compute):
 pure data movement through ``all_to_all_bf16`` per chunk, hence
 bit-identical to the flat a2a in values and gradients — that is what the
@@ -33,15 +46,24 @@ def _update(buf, val, i, size, axis):
     return jax.lax.dynamic_update_slice_in_dim(buf, val, i * size, axis)
 
 
+def _check_divides(chunks: int, extent: int) -> None:
+    if chunks > 1 and extent % chunks:
+        raise ValueError(
+            f"overlap_chunks={chunks} does not divide the slot extent "
+            f"{extent}; the planner must validate this at plan time "
+            f"(degrade to flat / pad the slot count) — see comm/planner.py")
+
+
 def pipelined_all_to_all_bf16(x, axis_name: str, split: int, concat: int,
                               chunks: int, *, chunk_axis: int = 2):
     """Flat a2a transferred in ``chunks`` slices of ``chunk_axis`` (which
-    must differ from split/concat and divide evenly).  Bit-identical to
-    ``all_to_all_bf16`` — each chunk is the same bf16-pinned primitive —
-    but exposes K independent transfers the scheduler can interleave with
-    neighbouring compute."""
+    must differ from split/concat and divide evenly — indivisible chunk
+    counts raise).  Bit-identical to ``all_to_all_bf16`` — each chunk is
+    the same bf16-pinned primitive — but exposes K independent transfers
+    the scheduler can interleave with neighbouring compute."""
     extent = x.shape[chunk_axis]
-    if chunks <= 1 or extent % chunks or chunk_axis in (split, concat):
+    _check_divides(chunks, extent)
+    if chunks <= 1 or chunk_axis in (split, concat):
         return all_to_all_bf16(x, axis_name, split, concat)
     size = extent // chunks
 
@@ -54,34 +76,39 @@ def pipelined_all_to_all_bf16(x, axis_name: str, split: int, concat: int,
 
 
 def pipelined_moe_exchange(send, compute_fn, axis_name: str, chunks: int,
-                           *, chunk_axis: int = 2):
+                           *, chunk_axis: int = 2, transfer=None):
     """dispatch a2a -> compute_fn -> combine a2a, pipelined over slot
-    chunks.  send: [R, e_local, c, H]; compute_fn maps a received chunk
-    [R, e_local, c/K, H] to the same shape (per-token expert MLP).
+    chunks.  send: [R, e_local, c, H] float; compute_fn maps a received
+    chunk [R, e_local, c/K, H] to the same shape (per-token expert MLP).
+
+    ``transfer`` is one planned a2a leg (defaults to the flat bf16-pinned
+    a2a); with a wire codec active it encodes/decodes each chunk in
+    transit (comm/wire.transfer_fn), so compute_fn always sees the
+    decoded compute dtype.
 
     Stage-(k) transfer and stage-(k-1) compute share a loop iteration
     without depending on each other — the double buffer is the loop carry
     holding the chunk received last iteration."""
+    if transfer is None:
+        def transfer(v):
+            return all_to_all_bf16(v, axis_name, 0, 0)
     extent = send.shape[chunk_axis]
-    if chunks <= 1 or extent % chunks:
-        recv = all_to_all_bf16(send, axis_name, 0, 0)
-        return all_to_all_bf16(compute_fn(recv), axis_name, 0, 0)
+    _check_divides(chunks, extent)
+    if chunks <= 1:
+        return transfer(compute_fn(transfer(send)))
     size = extent // chunks
 
-    def a2a(v):
-        return all_to_all_bf16(v, axis_name, 0, 0)
-
     def finish(chunk):
-        return a2a(compute_fn(chunk))
+        return transfer(compute_fn(chunk))
 
-    recv0 = a2a(_slice(send, 0, size, chunk_axis))
+    recv0 = transfer(_slice(send, 0, size, chunk_axis))
 
     def body(i, carry):
         out, prev = carry
-        nxt = a2a(_slice(send, i, size, chunk_axis))   # transfer chunk i
-        done = finish(prev)                            # compute chunk i-1
+        nxt = transfer(_slice(send, i, size, chunk_axis))  # transfer chunk i
+        done = finish(prev)                                # compute chunk i-1
         return _update(out, done, i - 1, size, chunk_axis), nxt
 
     out, last = jax.lax.fori_loop(
-        1, chunks, body, (jnp.zeros_like(send), recv0))
+        1, chunks, body, (jnp.zeros(send.shape, recv0.dtype), recv0))
     return _update(out, finish(last), chunks - 1, size, chunk_axis)

@@ -22,11 +22,13 @@ the table3 ablation.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import os
 from dataclasses import dataclass
 from typing import Callable, Optional
 
 from repro.comm import topology as topo_lib
+from repro.comm import wire as wire_lib
 from repro.comm.collectives import (all_gather_bf16, all_to_all_bf16,
                                     reduce_scatter_bf16)
 from repro.comm.hierarchical import (hierarchical_all_to_all_bf16,
@@ -41,6 +43,8 @@ PIPELINED = "pipelined"
 AUTO = "auto"
 ALGORITHMS = (FLAT, HIERARCHICAL, PIPELINED)
 ENV_VAR = "REPRO_COMM_IMPL"
+
+log = logging.getLogger(__name__)
 
 
 @dataclass(frozen=True)
@@ -58,12 +62,14 @@ class CommPlan:
 
     def all_to_all(self, x, split: int = 0, concat: int = 0):
         """Planned a2a of x: [R, ...] over the wire axis.  Hierarchical
-        requires the node-major split=concat=0 layout; other layouts fall
-        through to flat."""
+        requires the node-major split=concat=0 layout; other layouts (and
+        tensors the planned chunk count cannot slice) fall through to
+        flat."""
         if self.algorithm == HIERARCHICAL and split == 0 and concat == 0:
             return hierarchical_all_to_all_bf16(x, self.axis_name,
                                                 self.intra)
-        if self.algorithm == PIPELINED and x.ndim > 2:
+        if self.algorithm == PIPELINED and x.ndim > 2 \
+                and x.shape[2] % self.chunks == 0:
             return pipelined_all_to_all_bf16(x, self.axis_name, split,
                                              concat, self.chunks)
         return all_to_all_bf16(x, self.axis_name, split, concat)
@@ -76,11 +82,30 @@ class CommPlan:
     def reduce_scatter(self, x, axis_name: str, axis: int, g: int):
         return reduce_scatter_bf16(x, axis_name, axis, g)
 
-    def moe_exchange(self, send, compute_fn: Callable):
+    def moe_exchange(self, send, compute_fn: Callable, codec=None):
         """dispatch a2a -> compute_fn -> combine a2a on the wire tensor
         send: [R, e_local, c, H].  compute_fn maps a received chunk (full
         tensor, or a slot-chunk of it on the pipelined path) to the same
-        shape — the per-token expert MLP."""
+        shape — the per-token expert MLP.
+
+        ``codec`` (a ``comm.wire.WireCodec``) selects the on-wire
+        representation: send stays FLOAT, each leg encodes in transit
+        (int8/fp8 payload + scales sidecar through whichever transport is
+        planned) and compute_fn sees the decoded compute dtype, with a
+        straight-through backward.  None keeps the raw bf16-pinned path
+        (the use_lsh=False baseline) byte-identical."""
+        if codec is not None:
+            if self.algorithm == PIPELINED:
+                return pipelined_moe_exchange(
+                    send, compute_fn, self.axis_name, self.chunks,
+                    transfer=wire_lib.transfer_fn(codec, self.axis_name))
+            if self.algorithm == HIERARCHICAL:
+                fwd, bwd = wire_lib.hierarchical_leaves(self.axis_name,
+                                                        self.intra)
+            else:
+                fwd, bwd = wire_lib.flat_leaves(self.axis_name)
+            return wire_lib.coded_moe_exchange(send, compute_fn, codec,
+                                               fwd, bwd)
         if self.algorithm == PIPELINED:
             return pipelined_moe_exchange(send, compute_fn, self.axis_name,
                                           self.chunks)
@@ -154,6 +179,11 @@ def plan_collectives(mesh=None, comm=None, *, axis_name: str = "model",
         requested, reason = FLAT, (
             f"degraded: overlap_chunks={chunks} cannot chunk slot axis "
             f"of {chunk_extent}")
+    if reason.startswith("degraded"):
+        # comm/pipeline.py raises on indivisible chunkings rather than
+        # silently falling through, so plan time is the ONLY place a
+        # mis-sized request gets rescued — make it visible.
+        log.warning("comm planner: %s -> running flat", reason)
     return CommPlan(algorithm=requested, axis_name=axis_name, intra=intra,
                     chunks=chunks if requested == PIPELINED else 1,
                     reason=reason, topology=topo)

@@ -1,0 +1,176 @@
+"""Wire codec: the quantized (or bf16) on-wire representation of the MoE
+exchange, shared by all three transports (docs/comm.md).
+
+A ``WireCodec`` describes how the [R, e_local, c, H] wire tensor travels:
+
+  "bf16"   one leaf, the payload cast to ``wire_dtype`` (today's format);
+  "int8"   two leaves: int8 payload + a [R, e_local, c] f32 power-of-two
+  "fp8"    scale sidecar (kernels/wire_quant.py), ~2x fewer bytes.
+
+``coded_transfer`` is ONE planned all-to-all of a float tensor under a
+codec: encode -> per-leaf transport -> decode.  It is the custom_vjp
+boundary that makes the quantized wire trainable: an int8 payload has no
+cotangent (integer primals are float0 in JAX), so instead of
+differentiating through the leaves, the backward pass is the transposed
+transport of the float cotangent — straight-through across the
+encode/transport/decode sandwich, exactly mirroring the bf16 path's
+backward program (gradients are never quantized; the backward wire stays
+``grad_dtype`` = bf16).
+
+Because quantization is per-(group, slot) row, encode commutes with slot
+slicing — the pipelined transport slices the FLOAT tensor and each chunk
+transfer carries its own payload+scales, which is what keeps the scales
+sidecar in lockstep with slot chunks, and chunked results bit-identical
+to the unchunked transfer.  The hierarchical transport runs both of its
+hops on every leaf, so the sidecar rides the 2-hop per hop.
+
+Re-encoding is lossless by construction: ``clustering.compress`` already
+stores the DEQUANTIZED centroids (power-of-two scales make the quant pair
+idempotent on its own output), so encode here reproduces bit-identical
+wire values to the ones the residuals were computed against.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.collectives import _raw_a2a
+from repro.comm.hierarchical import _two_hop
+from repro.kernels import dispatch
+from repro.kernels.wire_quant import (BF16_FORMAT, QUANT_FORMATS,
+                                      WIRE_FORMATS, validate_wire_format)
+
+
+@dataclass(frozen=True)
+class WireCodec:
+    """Static (hashable) trace-time description of the wire format.
+
+    ``backend`` holds the resolved per-op kernel-backend mapping as sorted
+    items so the codec can ride custom_vjp nondiff argnums."""
+    fmt: str                              # "bf16" | "int8" | "fp8"
+    wire_dtype: str = "bfloat16"          # payload dtype of the bf16 format
+    compute_dtype: str = "bfloat16"       # dtype handed to the expert MLP
+    backend: Tuple[Tuple[str, str], ...] = ()
+
+    @property
+    def quantized(self) -> bool:
+        return self.fmt in QUANT_FORMATS
+
+    @property
+    def grad_dtype(self):
+        """Backward-pass wire dtype: gradients are not quantized — the
+        straight-through backward transports bf16 (or the bf16 format's
+        own payload dtype)."""
+        return jnp.dtype(self.wire_dtype) if self.fmt == BF16_FORMAT \
+            else jnp.bfloat16
+
+    def encode(self, x: jax.Array) -> Tuple[jax.Array, ...]:
+        """Float wire tensor [..., c, H] -> transport leaves (payload,
+        [scales]).  Quantization collapses the leading dims to the
+        [G, S, H] kernel contract and restores them on the sidecar."""
+        if not self.quantized:
+            return (x.astype(jnp.dtype(self.wire_dtype)),)
+        lead = x.shape[:-2]
+        q, scales = dispatch.wire_quantize(
+            x.reshape((-1,) + x.shape[-2:]), self.fmt,
+            backend=dict(self.backend) or None)
+        return (q.reshape(x.shape),
+                scales.reshape(lead + x.shape[-2:-1]))
+
+    def decode(self, leaves: Tuple[jax.Array, ...]) -> jax.Array:
+        """Transport leaves -> float tensor in ``compute_dtype``.  Exact
+        for the quantized formats: power-of-two-scaled int8/fp8 values are
+        representable in bf16."""
+        if not self.quantized:
+            return leaves[0].astype(jnp.dtype(self.compute_dtype))
+        q, scales = leaves
+        out = dispatch.wire_dequantize(
+            q.reshape((-1,) + q.shape[-2:]),
+            scales.reshape(-1, scales.shape[-1]),
+            backend=dict(self.backend) or None)
+        return out.reshape(q.shape).astype(jnp.dtype(self.compute_dtype))
+
+
+def make_codec(fmt: str, *, wire_dtype="bfloat16", compute_dtype="bfloat16",
+               backend: dispatch.BackendSpec = None) -> WireCodec:
+    """Validate the format name and freeze the backend spec — a per-op
+    mapping (``dispatch.resolve_backends`` output), a single backend name
+    (resolved here), or None (= auto at call time)."""
+    validate_wire_format(fmt)
+    if isinstance(backend, Mapping):
+        items = tuple(sorted(backend.items()))
+    elif backend is None:
+        items = ()
+    else:
+        items = (("*", dispatch.resolve_backend(backend)),)
+    return WireCodec(fmt=fmt, wire_dtype=jnp.dtype(wire_dtype).name,
+                     compute_dtype=jnp.dtype(compute_dtype).name,
+                     backend=items)
+
+
+# ------------------------------------------------------- coded transfer --
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def coded_transfer(x, codec: WireCodec, fwd_leaf: Callable,
+                   bwd_leaf: Callable):
+    """One planned a2a of float ``x`` under ``codec``: encode, move every
+    leaf with ``fwd_leaf`` (flat / 2-hop / per-chunk — already bound to
+    axis and groups), decode.  The backward pass is ``bwd_leaf`` — the
+    TRANSPOSE transport — applied straight-through to the float cotangent
+    in ``codec.grad_dtype`` (the quant pair contributes identity)."""
+    return codec.decode(tuple(fwd_leaf(leaf) for leaf in codec.encode(x)))
+
+
+def _transfer_fwd(x, codec, fwd_leaf, bwd_leaf):
+    # The cotangent must come back in the PRIMAL's dtype, which can differ
+    # from the decoded output's compute_dtype (e.g. an f32 expert-MLP
+    # output entering a bf16-compute combine leg).
+    return coded_transfer(x, codec, fwd_leaf, bwd_leaf), \
+        jnp.zeros((), x.dtype)
+
+
+def _transfer_bwd(codec, fwd_leaf, bwd_leaf, xproto, ct):
+    return (bwd_leaf(ct.astype(codec.grad_dtype)).astype(xproto.dtype),)
+
+
+coded_transfer.defvjp(_transfer_fwd, _transfer_bwd)
+
+
+# ------------------------------------------------- per-transport leaves --
+
+def flat_leaves(axis_name: str):
+    """(fwd, bwd) leaf transports for the flat a2a (self-transpose)."""
+    def leaf(v):
+        return _raw_a2a(v, axis_name, 0, 0)
+    return leaf, leaf
+
+
+def hierarchical_leaves(axis_name: str, intra: int):
+    """(fwd, bwd) for the 2-hop a2a: every leaf — scales sidecar included
+    — crosses both hops; the transpose is the mirrored 2-hop."""
+    def fwd(v):
+        return _two_hop(v, axis_name, intra, mirrored=False)
+
+    def bwd(v):
+        return _two_hop(v, axis_name, intra, mirrored=True)
+    return fwd, bwd
+
+
+def transfer_fn(codec: WireCodec, axis_name: str):
+    """Bound flat coded transfer — the pipelined transport applies it per
+    slot chunk, so payload and scales are sliced in lockstep."""
+    fwd, bwd = flat_leaves(axis_name)
+    return lambda v: coded_transfer(v, codec, fwd, bwd)
+
+
+def coded_moe_exchange(send, compute_fn, codec: WireCodec, fwd_leaf,
+                       bwd_leaf):
+    """dispatch a2a -> compute_fn -> combine a2a, both legs coded.
+    ``send``: float [R, e_local, c, H]; ``compute_fn`` maps the decoded
+    (``compute_dtype``) tensor to the same shape."""
+    recv = coded_transfer(send, codec, fwd_leaf, bwd_leaf)
+    return coded_transfer(compute_fn(recv), codec, fwd_leaf, bwd_leaf)

@@ -32,7 +32,13 @@ class LSHConfig:
     num_hashes: int = 6                 # paper default (≈20% compression)
     rotation_dim: int = 64              # d of the cross-polytope (≤ d_model)
     compression_rate: float = 0.2       # slots = ceil(rate * capacity)
-    wire_dtype: str = "bfloat16"        # beyond-paper: dtype on the wire
+    # On-wire representation of the compressed exchange (comm/wire.py):
+    # "bf16" ships the payload in `wire_dtype`; "int8" / "fp8" quantize it
+    # per (expert, slot) with an f32 power-of-two scale sidecar (~2x fewer
+    # bytes) — the quantization error is absorbed by the residual scheme
+    # (core/clustering.py), so combine outputs stay loss-transparent.
+    wire_format: str = "bf16"           # "bf16" | "int8" | "fp8"
+    wire_dtype: str = "bfloat16"        # payload dtype of the bf16 format
     error_compensation: bool = True     # paper's residual scheme (ablatable)
 
 

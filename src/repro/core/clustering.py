@@ -10,6 +10,21 @@ outputs via Y = E(centroid) + Δ (Eq. 4/5).  All shapes static:
 
 G = expert groups (vectorized), C = per-group capacity, S = slots.
 
+Wire formats (LSHConfig.wire_format): the centroid tensor can cross the
+all-to-all as bf16, or quantized to int8 / fp8-e4m3 with one f32 scale
+per (group, slot) riding as a sidecar (kernels/wire_quant.py).  The
+residual scheme absorbs the quantization: ``compress`` computes residuals
+against the **dequantized** centroids — residual = token − dequant(quant(
+centroid)) — and ``decompress`` reassociates Eq. 5 as
+
+  Y = token + (E(c_dq) − c_dq)[slot]          (c_dq = dequantized centroid)
+
+so the wire representation cancels out of Y exactly wherever the expert
+preserves its input: quantization error never reaches the combine step
+additively, only through the expert's own nonlinearity.  (With an
+identity exchange this makes Y bit-identical across wire formats —
+pinned by tests/test_wire_format.py.)
+
 Both directions dispatch through the kernel backend registry
 (kernels/dispatch.py).  On the ``reference`` backend centroid accumulation
 is a one-hot contraction in XLA; on the Pallas backends the [G, C, S]
@@ -19,20 +34,51 @@ compensation add.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.hashing import lsh_hash
 from repro.kernels import dispatch
+from repro.kernels.wire_quant import (BF16_FORMAT, WIRE_FORMATS,
+                                      quant_dtype, validate_wire_format)
+
+_SCALE_BYTES = 4                          # one f32 scale per (group, slot)
 
 
 class Compressed(NamedTuple):
-    centroids: jax.Array      # [G, S, H]  (wire tensor)
-    residuals: jax.Array      # [G, C, H]  (stays local)
+    centroids: jax.Array      # [G, S, H] wire values, DEQUANTIZED (exact:
+    #                           power-of-two-scaled int8/fp8 round-trips
+    #                           bf16/f32 losslessly)
+    residuals: jax.Array      # [G, C, H] token − centroids[slot] (local).
+    #                           With compensation on this is the paper's
+    #                           diagnostic view of the scheme; decompress
+    #                           itself reads (tokens, centroids) — the
+    #                           reassociated form — and XLA DCEs this
+    #                           field inside jit when nothing consumes it.
     slots: jax.Array          # [G, C] int32 slot id per token
     counts: jax.Array         # [G, S] tokens per slot (diagnostic)
+    scales: Optional[jax.Array] = None    # [G, S] f32 sidecar (int8/fp8)
+    tokens: Optional[jax.Array] = None    # [G, C, H] originals (when
+    #                           error compensation is on — decompress adds
+    #                           the expert delta onto these directly)
+
+
+def wire_bytes(num_groups: int, num_slots: int, hidden: int,
+               wire_format: Optional[str] = None, *,
+               wire_dtype=jnp.bfloat16) -> int:
+    """True per-rank wire-buffer bytes of one dispatch (or combine) leg,
+    including the scales sidecar — THE accounting used by core/moe.py's
+    planner msg_bytes, ``compression_stats`` and the table3 comm model,
+    so the three can never disagree.
+
+    ``wire_format`` None or "bf16": payload only, in ``wire_dtype``.
+    "int8" / "fp8": 1-byte payload + one f32 scale per (group, slot)."""
+    if wire_format in (None, BF16_FORMAT):
+        return num_groups * num_slots * hidden * jnp.dtype(wire_dtype).itemsize
+    payload = jnp.dtype(quant_dtype(wire_format)).itemsize
+    return num_groups * num_slots * (hidden * payload + _SCALE_BYTES)
 
 
 def assign_slots(tokens: jax.Array, rotations: jax.Array, num_slots: int,
@@ -43,13 +89,36 @@ def assign_slots(tokens: jax.Array, rotations: jax.Array, num_slots: int,
     return jnp.abs(ids) % jnp.int32(num_slots)
 
 
+def _to_wire(centroids: jax.Array, wire_format: Optional[str], wire_dtype,
+             backend: dispatch.BackendSpec):
+    """f32 centroids -> (dequantized wire values f32, scales or None).
+
+    The returned values are exactly what the far side of the a2a will
+    reconstruct: comm/wire.py re-encodes them in transit, and power-of-two
+    scales make that re-encode dequantize bit-identically
+    (kernels/wire_quant.py)."""
+    if wire_format is None:
+        return centroids, None
+    if validate_wire_format(wire_format) == BF16_FORMAT:
+        return centroids.astype(wire_dtype).astype(jnp.float32), None
+    return dispatch.wire_roundtrip(centroids, wire_format, backend=backend)
+
+
 def compress(tokens: jax.Array, valid: jax.Array, rotations: jax.Array,
              num_slots: int, hash_type: str = "cross_polytope",
              error_compensation: bool = True,
-             backend: dispatch.BackendSpec = dispatch.AUTO) -> Compressed:
+             backend: dispatch.BackendSpec = dispatch.AUTO, *,
+             wire_format: Optional[str] = None,
+             wire_dtype=jnp.bfloat16) -> Compressed:
     """tokens: [G, C, H]; valid: [G, C] bool (occupied buffer slots).
     ``backend`` is a name or the per-op mapping from
-    ``dispatch.resolve_backends`` — each op resolves its own entry."""
+    ``dispatch.resolve_backends`` — each op resolves its own entry.
+
+    ``wire_format`` (None | "bf16" | "int8" | "fp8") rounds the centroids
+    to their on-wire representation BEFORE residuals are computed, so the
+    compensation absorbs the cast/quantization error along with the
+    clustering error.  None keeps the centroids in ``tokens.dtype``
+    (legacy single-host callers); "bf16" casts through ``wire_dtype``."""
     G, C, H = tokens.shape
     slots = assign_slots(tokens, rotations, num_slots, hash_type, backend)
     slots = jnp.where(valid, slots, num_slots)            # invalid -> overflow bin
@@ -59,38 +128,68 @@ def compress(tokens: jax.Array, valid: jax.Array, rotations: jax.Array,
     # invalid tokens drop out on every backend.
     cent_f32, counts = dispatch.segment_centroid(
         slots, tokens, num_slots, backend=backend)
+    cent_f32, scales = _to_wire(cent_f32, wire_format, wire_dtype, backend)
     centroids = cent_f32.astype(tokens.dtype)
     if error_compensation:
         gathered = dispatch.residual_apply(
-            slots, centroids.astype(jnp.float32),
-            jnp.zeros((G, C, H), jnp.float32), backend=backend)
+            slots, cent_f32, jnp.zeros((G, C, H), jnp.float32),
+            backend=backend)
         residuals = tokens.astype(jnp.float32) - gathered
+        kept_tokens = tokens
     else:
         residuals = jnp.zeros((G, C, H), jnp.float32)
+        kept_tokens = None
     slots = jnp.minimum(slots, num_slots - 1)             # clamp overflow bin
     return Compressed(centroids, residuals.astype(tokens.dtype), slots,
-                      counts)
+                      counts, scales, kept_tokens)
 
 
 def decompress(expert_out: jax.Array, comp: Compressed,
                backend: dispatch.BackendSpec = dispatch.AUTO) -> jax.Array:
     """expert_out: [G, S, H] = E(centroids).  Returns [G, C, H] ≈ E(tokens).
 
-    Paper Eq. 5: Y = E(centroid_of(token)) + residual(token)."""
-    out = dispatch.residual_apply(comp.slots, expert_out,
-                                  comp.residuals.astype(jnp.float32),
-                                  backend=backend)
+    Paper Eq. 5, reassociated: Y = token + (E(c_dq) − c_dq)[slot].  The
+    centroid's wire representation cancels out of Y exactly wherever the
+    expert preserves its input, which is what makes the quantized wire
+    formats loss-transparent at the combine step (the delta — not the raw
+    expert output — is what the residuals were computed against).
+
+    Without error compensation Y = E(c_dq)[slot] (comp.tokens is None)."""
+    if comp.tokens is None:
+        out = dispatch.residual_apply(comp.slots, expert_out,
+                                      comp.residuals.astype(jnp.float32),
+                                      backend=backend)
+    else:
+        delta = expert_out - comp.centroids.astype(jnp.float32)
+        out = dispatch.residual_apply(comp.slots, delta,
+                                      comp.tokens.astype(jnp.float32),
+                                      backend=backend)
     return out.astype(expert_out.dtype)
 
 
-def compression_stats(comp: Compressed, valid: jax.Array) -> dict:
-    """Measured wire compression: occupied slots / valid tokens."""
-    num_slots = comp.centroids.shape[1]
+def compression_stats(comp: Compressed, valid: jax.Array,
+                      wire_format: Optional[str] = None,
+                      wire_dtype=None) -> dict:
+    """Measured wire compression: occupied slots / valid tokens, plus the
+    true wire bytes (scales sidecar included) via ``wire_bytes``."""
+    G, num_slots = comp.counts.shape
     capacity = comp.residuals.shape[1]
+    hidden = comp.centroids.shape[-1]
+    if wire_format is None and comp.scales is not None:
+        wire_format = "int8"              # 1-byte payload; fp8 is byte-equal
+    if wire_dtype is None:
+        # The production wire is bf16 unless the caller says otherwise —
+        # centroids.dtype would double-count f32 legacy centroids.
+        wire_dtype = jnp.bfloat16
     occupied = (comp.counts > 0).sum(axis=-1).astype(jnp.float32)  # [G]
     tokens = jnp.maximum(valid.sum(axis=-1).astype(jnp.float32), 1.0)
+    wbytes = wire_bytes(G, num_slots, hidden, wire_format,
+                        wire_dtype=wire_dtype)
     return {
         "configured_rate": float(num_slots) / float(max(1, capacity)),
         "occupied_slots": occupied.mean(),
         "effective_rate": (occupied / tokens).mean(),
+        "wire_bytes": wbytes,
+        "wire_bytes_ratio_vs_bf16": wbytes / max(1, wire_bytes(
+            G, num_slots, hidden, BF16_FORMAT)),
     }

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.comm import planner as comm_planner
+from repro.comm import wire as wire_lib
 from repro.compat import shard_map
 from repro.configs.base import MoEConfig
 from repro.core import clustering, routing
@@ -59,8 +60,14 @@ def expert_capacity(tokens_per_device: int, num_experts_padded: int,
     return max(8, int(math.ceil(cap / 8) * 8))
 
 
-def num_lsh_slots(capacity: int, rate: float) -> int:
-    return max(8, int(math.ceil(capacity * rate / 8) * 8))
+def num_lsh_slots(capacity: int, rate: float, multiple: int = 1) -> int:
+    """Slot count: ceil(rate * capacity) rounded up to lcm(8, multiple).
+    ``multiple`` is the configured overlap-chunk count, so a pipelined
+    transport always finds a slot axis it can chunk evenly (the planner
+    degrades to flat — with a logged reason — only when padding is
+    impossible, e.g. the uncompressed capacity axis)."""
+    unit = math.lcm(8, max(1, multiple))
+    return max(unit, int(math.ceil(capacity * rate / unit) * unit))
 
 
 def _resolve_moe_backend(cfg: MoEConfig, kernel_backend, *,
@@ -95,8 +102,8 @@ def _expert_mlp(tok, w_gate, w_up, w_down, mlp_act: str):
 
 def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
                cfg: MoEConfig, mesh: Mesh, mlp_act: str, e_pad: int,
-               capacity: int, use_lsh: bool, wire_dtype, kernel_backend,
-               cplan: comm_planner.CommPlan):
+               capacity: int, use_lsh: bool, lsh_slots: int, wire_dtype,
+               codec, kernel_backend, cplan: comm_planner.CommPlan):
     """Per-device body. x: [B_loc, S_loc, H]."""
     model_r = axis_size(mesh, "model")
     e_local = e_pad // model_r
@@ -112,20 +119,27 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
                                    backend=kernel_backend).astype(xf.dtype)
 
     if use_lsh:
-        slots = num_lsh_slots(capacity, cfg.lsh.compression_rate)
-        comp = clustering.compress(disp, plan.occupancy, rot, slots,
+        # Residuals are computed against the DEQUANTIZED wire centroids,
+        # so the codec's in-transit encode (comm/wire.py) is exactly
+        # loss-transparent at the combine step.
+        comp = clustering.compress(disp, plan.occupancy, rot, lsh_slots,
                                    cfg.lsh.hash_type,
                                    cfg.lsh.error_compensation,
-                                   backend=kernel_backend)
-        wire, c_wire = comp.centroids, slots
+                                   backend=kernel_backend,
+                                   wire_format=cfg.lsh.wire_format,
+                                   wire_dtype=wire_dtype)
+        wire, c_wire = comp.centroids, lsh_slots
     else:
         comp, wire, c_wire = None, disp, capacity
 
     # ---- wire exchange: dispatch a2a -> expert MLP -> combine a2a, with
-    # the transport (flat | hierarchical | pipelined) picked by the plan.
-    # The compressed tensor is the only thing that crosses the wire.
+    # the transport (flat | hierarchical | pipelined) picked by the plan
+    # and the on-wire representation (bf16 | int8+scales | fp8+scales) by
+    # the codec.  The compressed tensor is the only thing that crosses
+    # the wire; with a codec the cast/quantize happens in transit.
     data_r = axis_size(mesh, "data")
-    wire = wire.astype(wire_dtype)
+    if codec is None:
+        wire = wire.astype(wire_dtype)
     send = wire.reshape(model_r, e_local, c_wire, H)
     # expert weights: FSDP all-gather over `data` (H axis) — hoisted out of
     # the (possibly chunked) exchange so they are gathered exactly once
@@ -140,10 +154,10 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
         r_, el, ck, h_ = recv.shape
         tok = recv.transpose(1, 0, 2, 3).reshape(el, r_ * ck, h_)
         out = _expert_mlp(tok.astype(x.dtype), wg, wu, wd, mlp_act)
-        return out.reshape(el, r_, ck, h_).transpose(1, 0, 2, 3) \
-                  .astype(wire_dtype)
+        out = out.reshape(el, r_, ck, h_).transpose(1, 0, 2, 3)
+        return out if codec is not None else out.astype(wire_dtype)
 
-    ret = cplan.moe_exchange(send, expert_chunk)          # [R, e_local, c', H]
+    ret = cplan.moe_exchange(send, expert_chunk, codec=codec)
     expert_out = ret.reshape(e_pad, c_wire, H).astype(jnp.float32)
 
     if use_lsh:
@@ -183,13 +197,32 @@ def moe_expert_parallel(x: jax.Array, params: Dict, cfg: MoEConfig,
     use_lsh = cfg.lsh.enabled if use_lsh is None else use_lsh
     wire_dtype = jnp.dtype(cfg.lsh.wire_dtype) if use_lsh else x.dtype
     backend = _resolve_moe_backend(cfg, kernel_backend, lsh_active=use_lsh)
-    c_wire = num_lsh_slots(capacity, cfg.lsh.compression_rate) if use_lsh \
-        else capacity
+    # Slot count padded so the configured overlap chunking always divides
+    # the slot axis (the pipelined transport's plan-time requirement) —
+    # but only when pipelined can actually be selected: padding inflates
+    # wire bytes AND shifts the hash modulo, so an explicit flat /
+    # hierarchical transport must not pay for a chunking it never runs.
+    chunk_mult = cfg.comm.overlap_chunks \
+        if (cfg.comm.a2a_impl or comm_planner.AUTO) in (
+            comm_planner.AUTO, comm_planner.PIPELINED) else 1
+    c_wire = num_lsh_slots(capacity, cfg.lsh.compression_rate,
+                           multiple=chunk_mult) if use_lsh else capacity
+    # On-wire representation: the codec validates cfg.lsh.wire_format and
+    # carries the kernel-backend mapping for the quant/dequant ops; the
+    # use_lsh=False baseline ships the raw dispatch buffer codec-free
+    # (byte-identical to the pre-wire-format path).
+    wire_fmt = cfg.lsh.wire_format if use_lsh else None
+    codec = wire_lib.make_codec(wire_fmt, wire_dtype=wire_dtype,
+                                compute_dtype=x.dtype,
+                                backend=backend) if use_lsh else None
     # Transport resolution (flat | hierarchical | pipelined) happens HERE,
-    # once per traced step — _local_moe only consumes the plan.
+    # once per traced step — _local_moe only consumes the plan.  The
+    # message size feeding transport auto-selection is the TRUE wire
+    # bytes, scales sidecar included (clustering.wire_bytes).
     cplan = comm_planner.plan_collectives(
         mesh, cfg.comm, axis_name="model",
-        msg_bytes=e_pad * c_wire * H * wire_dtype.itemsize,
+        msg_bytes=clustering.wire_bytes(e_pad, c_wire, H, wire_fmt,
+                                        wire_dtype=wire_dtype),
         chunk_extent=c_wire)
 
     tok_spec = P(dp if len(dp) > 1 else (dp[0] if dp else None), "model", None)
@@ -198,7 +231,8 @@ def moe_expert_parallel(x: jax.Array, params: Dict, cfg: MoEConfig,
 
     fn = partial(_local_moe, cfg=cfg, mesh=mesh, mlp_act=mlp_act,
                  e_pad=e_pad, capacity=capacity, use_lsh=use_lsh,
-                 wire_dtype=wire_dtype, kernel_backend=backend, cplan=cplan)
+                 lsh_slots=c_wire if use_lsh else 0, wire_dtype=wire_dtype,
+                 codec=codec, kernel_backend=backend, cplan=cplan)
     y, aux, z, load = shard_map(
         fn, mesh=mesh,
         in_specs=(tok_spec, P(None, None),

@@ -47,6 +47,8 @@ from repro.kernels.scatter_gather import (combine_gather_pallas,
                                           dispatch_scatter_pallas)
 from repro.kernels.segment_centroid import segment_centroid_pallas
 from repro.kernels.token_position import positions_in_expert_pallas
+from repro.kernels.wire_quant import (wire_dequantize_pallas,
+                                      wire_quantize_pallas)
 
 REFERENCE = "reference"
 PALLAS_INTERPRET = "pallas_interpret"
@@ -55,7 +57,8 @@ AUTO = "auto"
 ENV_VAR = "REPRO_KERNEL_BACKEND"
 
 OPS = ("lsh_hash", "segment_centroid", "residual_apply",
-       "positions_in_expert", "dispatch_scatter", "combine_gather")
+       "positions_in_expert", "dispatch_scatter", "combine_gather",
+       "wire_quantize", "wire_dequantize")
 
 # A backend selector: a single name, or a per-op mapping op -> name with a
 # "*" default (see resolve_backends / MoEConfig.kernel_backend_overrides).
@@ -219,6 +222,10 @@ def _pallas_ops(interpret: bool) -> Dict[str, Callable]:
             PALLAS_INTERPRET if interpret else PALLAS_TPU][0],
         "combine_gather": _ROUTING_VJP[
             PALLAS_INTERPRET if interpret else PALLAS_TPU][1],
+        "wire_quantize": lambda x, fmt: wire_quantize_pallas(
+            x, fmt=fmt, interpret=interpret),
+        "wire_dequantize": lambda q, scales: wire_dequantize_pallas(
+            q, scales, interpret=interpret),
     }
 
 
@@ -229,6 +236,8 @@ _REFERENCE_OPS: Dict[str, Callable] = {
     "positions_in_expert": ref.positions_in_expert_ref,
     "dispatch_scatter": _ROUTING_VJP[REFERENCE][0],
     "combine_gather": _ROUTING_VJP[REFERENCE][1],
+    "wire_quantize": ref.wire_quantize_ref,
+    "wire_dequantize": ref.wire_dequantize_ref,
 }
 
 
@@ -382,3 +391,57 @@ def combine_gather(expert_ids, pos, buf, weights, *,
     backward pass is ``dispatch_scatter`` — mutual transposes)."""
     return _REGISTRY[op_backend(backend, "combine_gather")][
         "combine_gather"](expert_ids, pos, buf, weights)
+
+
+def wire_quantize(x, fmt: str, *, backend: BackendSpec = AUTO):
+    """x: [G, S, H] -> (q [G, S, H] int8|fp8-e4m3, scales [G, S] f32).
+
+    One power-of-two absmax scale per (group, slot) row; all-zero rows
+    quantize to zero payload with scale 1 (kernels/wire_quant.py).
+    Forward-only: gradients flow through ``wire_roundtrip`` (the
+    straight-through quant pair) or comm/wire.py's coded transfer, never
+    through the int8 payload itself."""
+    return _REGISTRY[op_backend(backend, "wire_quantize")][
+        "wire_quantize"](x, fmt)
+
+
+def wire_dequantize(q, scales, *, backend: BackendSpec = AUTO):
+    """(q [G, S, H], scales [G, S]) -> [G, S, H] f32 = q * scale.
+    Forward-only, like ``wire_quantize``."""
+    return _REGISTRY[op_backend(backend, "wire_dequantize")][
+        "wire_dequantize"](q, scales)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _wire_roundtrip(x, fmt, backend_name):
+    q, scales = _REGISTRY[backend_name]["wire_quantize"](x, fmt)
+    return _REGISTRY[backend_name]["wire_dequantize"](q, scales), scales
+
+
+def _wire_roundtrip_fwd(x, fmt, backend_name):
+    return _wire_roundtrip(x, fmt, backend_name), None
+
+
+def _wire_roundtrip_bwd(fmt, backend_name, _, cts):
+    ct_x, _ct_scales = cts
+    return (ct_x,)                        # straight-through: d/dx [dq∘q] := I
+
+
+_wire_roundtrip.defvjp(_wire_roundtrip_fwd, _wire_roundtrip_bwd)
+
+
+def wire_roundtrip(x, fmt: str, *, backend: BackendSpec = AUTO):
+    """The quantize→dequantize pair as one differentiable unit:
+    returns (dequantize(quantize(x)) [G, S, H] f32, scales [G, S] f32)
+    with a straight-through VJP (d/dx := identity — the pair is a
+    rounding, not a transformation).  This is how ``clustering.compress``
+    obtains the exact values the expert will see on the far side of the
+    wire while keeping centroids on the gradient path.
+
+    Power-of-two scales make the pair idempotent on its own output:
+    re-quantizing the returned values (as comm/wire.py's transport encode
+    does) dequantizes to bit-identical values again — for int8 the (q,
+    scales) representation itself is reproduced; fp8 may re-derive
+    (2q, scales/2) when the row max rounded down to exactly qmax/2, an
+    equivalent encoding of the same values."""
+    return _wire_roundtrip(x, fmt, op_backend(backend, "wire_quantize"))

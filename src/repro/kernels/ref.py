@@ -5,6 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.wire_quant import _encode, po2_scale, qmax
+
 
 def lsh_hash_ref(x: jax.Array, rotations: jax.Array) -> jax.Array:
     """x: [T, H]; rotations: [L, H, Dr] -> [T, L] int32 vertex ids."""
@@ -37,6 +39,20 @@ def residual_apply_ref(slots: jax.Array, expert_out: jax.Array,
         jnp.clip(slots, 0, S - 1)[..., None].astype(jnp.int32), axis=1)
     gathered = gathered * in_range[..., None].astype(jnp.float32)
     return gathered + residual.astype(jnp.float32)
+
+
+def wire_quantize_ref(x: jax.Array, fmt: str):
+    """x: [G, S, H] -> (q [G, S, H] int8|fp8, scales [G, S] f32): one
+    power-of-two absmax scale per (group, slot) row; all-zero rows get
+    scale 1 and zero payload (kernels/wire_quant.py)."""
+    xf = x.astype(jnp.float32)
+    scales = po2_scale(jnp.max(jnp.abs(xf), axis=-1), qmax(fmt))
+    return _encode(xf / scales[..., None], fmt), scales
+
+
+def wire_dequantize_ref(q: jax.Array, scales: jax.Array) -> jax.Array:
+    """(q [G, S, H], scales [G, S]) -> [G, S, H] f32 = q * scale."""
+    return q.astype(jnp.float32) * scales[..., None].astype(jnp.float32)
 
 
 def positions_in_expert_ref(expert_ids: jax.Array, num_experts: int):

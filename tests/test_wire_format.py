@@ -1,0 +1,434 @@
+"""Quantized wire formats (LSHConfig.wire_format: bf16 | int8 | fp8).
+
+In-process: kernel-op backend parity (reference vs pallas_interpret, incl.
+empty slots and all-zero tiles), power-of-two scale idempotence, the
+straight-through VJP, wire-bytes accounting, and the plan-time
+overlap-chunk validation.
+
+Subprocess (8 forced host devices, like tests/test_comm.py): with
+error_compensation on, the combine output is BIT-IDENTICAL across wire
+formats on all three transports whenever the exchange preserves its input
+(the quantization error is fully absorbed by the residuals); the full
+layer (real expert MLP) stays transport-bitwise per format and
+bf16-allclose across formats in values and gradients; and the compiled
+HLO's all-to-all operands shrink >= 1.8x for int8 vs bf16.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import wire as comm_wire
+from repro.core import clustering
+from repro.core.hashing import make_rotations
+from repro.core.moe import num_lsh_slots
+from repro.kernels import dispatch
+from repro.kernels.wire_quant import po2_scale, qmax
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+BACKENDS = ("reference", "pallas_interpret")
+FORMATS = ("int8", "fp8")
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=_SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def _wire_inputs(rng, g=3, s=17, h=40):
+    """[G, S, H] with a huge per-row dynamic range, an all-zero row and a
+    single-element row (absmax == the only value)."""
+    x = jax.random.normal(rng, (g, s, h))
+    x = x * jnp.exp(3.0 * jax.random.normal(jax.random.fold_in(rng, 1),
+                                            (g, s, 1)))
+    x = x.at[0, 5].set(0.0)
+    x = x.at[1, 2].set(0.0).at[1, 2, 7].set(-3.25)
+    return x
+
+
+# --------------------------------------------------------------- kernels --
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_wire_quantize_backend_parity(rng, fmt):
+    """q, scales and the dequantized values must be bit-equal between the
+    reference oracle and the Pallas kernel — including all-zero rows
+    (scale 1, zero payload) and odd shapes that hit kernel padding."""
+    x = _wire_inputs(rng)
+    outs = {}
+    for b in BACKENDS:
+        q, s = dispatch.wire_quantize(x, fmt, backend=b)
+        outs[b] = (np.asarray(q).astype(np.float32), np.asarray(s),
+                   np.asarray(dispatch.wire_dequantize(q, s, backend=b)))
+    for a, b in zip(outs["reference"], outs["pallas_interpret"]):
+        np.testing.assert_array_equal(a, b)
+    q, s, dq = outs["reference"]
+    assert (q[0, 5] == 0).all() and s[0, 5] == 1.0 and (dq[0, 5] == 0).all()
+    # scales are powers of two and the payload saturates its row budget
+    m, _ = np.frexp(s)
+    assert (m == 0.5).all()
+    assert np.abs(q).max() <= qmax(fmt)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_roundtrip_idempotent(rng, fmt, backend):
+    """Power-of-two scales: re-quantizing a dequantized tensor dequantizes
+    to bit-identical values (what lets compress store dequantized
+    centroids and comm/wire.py re-encode them in transit drift-free).
+    int8 additionally reproduces the (q, scales) representation."""
+    x = _wire_inputs(rng)
+    q, s = dispatch.wire_quantize(x, fmt, backend=backend)
+    dq = dispatch.wire_dequantize(q, s, backend=backend)
+    q2, s2 = dispatch.wire_quantize(dq, fmt, backend=backend)
+    dq2 = dispatch.wire_dequantize(q2, s2, backend=backend)
+    np.testing.assert_array_equal(np.asarray(dq), np.asarray(dq2))
+    if fmt == "int8":
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(s2))
+    # quantization error bound: absmax-scaled rounding, <= scale/2 (int8)
+    if fmt == "int8":
+        err = np.abs(np.asarray(dq) - np.asarray(x))
+        assert (err <= np.asarray(s)[..., None] * 0.5 + 1e-7).all()
+
+
+def test_po2_scale_exact_boundaries():
+    absmax = jnp.array([0.0, 127.0, 127.0 * 2.0 ** -20, 1e-20, 500.0])
+    s = np.asarray(po2_scale(absmax, 127.0))
+    assert s[0] == 1.0                      # all-zero rows
+    assert s[1] == 1.0                      # absmax/qmax == 1 exactly
+    assert s[2] == 2.0 ** -20               # power-of-two boundary exact
+    assert s[4] == 4.0                      # smallest po2 >= 500/127
+    # tiny-but-normal rows still get a usable positive po2 scale
+    m, _ = np.frexp(s)
+    assert (m == 0.5).all() and 0 < s[3] <= absmax[3] / 127 * 2
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_wire_roundtrip_straight_through(rng, fmt, backend):
+    """d/dx [dequantize(quantize(x))] := identity, bit-exactly."""
+    x = _wire_inputs(rng)
+
+    def f(t):
+        dq, _scales = dispatch.wire_roundtrip(t, fmt, backend=backend)
+        return (dq * 2.0).sum()
+
+    g = jax.jit(jax.grad(f))(x)
+    np.testing.assert_array_equal(np.asarray(g),
+                                  np.full(x.shape, 2.0, np.float32))
+
+
+# ------------------------------------------------- compress / decompress --
+
+@pytest.mark.parametrize("fmt", ("bf16",) + FORMATS)
+def test_identity_exchange_reconstructs_bitwise(rng, fmt):
+    """With error compensation on, an identity exchange reconstructs every
+    token BIT-EXACTLY regardless of wire format — the quantization error
+    is fully absorbed by the residuals (decompress adds the expert DELTA
+    onto the stored tokens, so the wire representation cancels).  All
+    formats therefore produce bit-identical combine inputs here."""
+    rot = make_rotations(jax.random.fold_in(rng, 1), 4, 64, 32, jnp.float32)
+    tokens = jax.random.normal(rng, (2, 24, 64))
+    valid = jnp.ones((2, 24), bool)
+    comp = clustering.compress(tokens, valid, rot, 8, "cross_polytope",
+                               True, wire_format=fmt)
+    recon = clustering.decompress(comp.centroids.astype(jnp.float32), comp)
+    np.testing.assert_array_equal(np.asarray(recon), np.asarray(tokens))
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_compress_backend_parity_with_quantized_wire(rng, fmt):
+    """compress -> decompress parity incl. a partially-valid and a
+    fully-invalid (empty) group, per backend, with the quantized format
+    active; stored centroids must re-encode losslessly."""
+    rot = make_rotations(jax.random.fold_in(rng, 2), 4, 64, 32, jnp.float32)
+    tokens = jax.random.normal(rng, (3, 40, 64))
+    n_valid = jnp.array([40, 13, 0])
+    valid = jnp.arange(40)[None, :] < n_valid[:, None]
+    tokens = tokens * valid[..., None]
+    comps = {b: clustering.compress(tokens, valid, rot, 8, "cross_polytope",
+                                    True, backend=b, wire_format=fmt)
+             for b in BACKENDS}
+    for field in ("centroids", "residuals", "slots", "counts", "scales"):
+        a = np.asarray(getattr(comps["reference"], field), np.float32)
+        b = np.asarray(getattr(comps["pallas_interpret"], field), np.float32)
+        np.testing.assert_allclose(a, b, atol=1e-5, err_msg=field)
+    for b, comp in comps.items():
+        q, s = dispatch.wire_quantize(comp.centroids.astype(jnp.float32),
+                                      fmt, backend=b)
+        dq = dispatch.wire_dequantize(q, s, backend=b)
+        np.testing.assert_array_equal(np.asarray(dq),
+                                      np.asarray(comp.centroids),
+                                      err_msg=f"{b}: stored centroids must "
+                                      "be wire-exact")
+
+
+# -------------------------------------------------- bytes / plan-time -----
+
+def test_wire_bytes_accounting():
+    """One helper for moe.py msg_bytes, compression_stats and the table3
+    comm model: payload + scales sidecar, and the reference-config int8
+    wire is under 0.55x of bf16 (the CI regression bound)."""
+    e_pad, c_wire, h = 64, 104, 2048
+    bf16 = clustering.wire_bytes(e_pad, c_wire, h, "bf16")
+    int8 = clustering.wire_bytes(e_pad, c_wire, h, "int8")
+    fp8 = clustering.wire_bytes(e_pad, c_wire, h, "fp8")
+    assert bf16 == e_pad * c_wire * h * 2
+    assert int8 == fp8 == e_pad * c_wire * (h + 4)
+    assert int8 <= 0.55 * bf16
+    assert clustering.wire_bytes(2, 8, 16, None,
+                                 wire_dtype=jnp.float32) == 2 * 8 * 16 * 4
+    with pytest.raises(ValueError, match="unknown"):
+        clustering.wire_bytes(2, 8, 16, "int4")
+
+
+def test_compression_stats_report_true_wire_bytes(rng):
+    rot = make_rotations(jax.random.fold_in(rng, 3), 4, 64, 32, jnp.float32)
+    tokens = jax.random.normal(rng, (2, 24, 64))
+    valid = jnp.ones((2, 24), bool)
+    comp = clustering.compress(tokens, valid, rot, 8, wire_format="int8")
+    st = clustering.compression_stats(comp, valid, wire_format="int8")
+    assert st["wire_bytes"] == clustering.wire_bytes(2, 8, 64, "int8")
+    assert st["wire_bytes_ratio_vs_bf16"] < 0.55
+    assert st["configured_rate"] == pytest.approx(8 / 24)
+    # format inferred from the scales sidecar when not passed
+    st2 = clustering.compression_stats(comp, valid)
+    assert st2["wire_bytes"] == st["wire_bytes"]
+
+
+def test_make_codec_validates_format():
+    with pytest.raises(ValueError, match="unknown wire format"):
+        comm_wire.make_codec("int4")
+    codec = comm_wire.make_codec("int8", compute_dtype="float32")
+    assert codec.quantized and codec.grad_dtype == jnp.bfloat16
+
+
+def test_num_lsh_slots_pads_for_overlap_chunks():
+    assert num_lsh_slots(320, 0.2) == 64
+    assert num_lsh_slots(320, 0.2, multiple=4) == 64      # lcm(8,4)=8
+    assert num_lsh_slots(320, 0.2, multiple=3) == 72      # lcm(8,3)=24
+    assert num_lsh_slots(320, 0.2, multiple=16) == 64
+    assert num_lsh_slots(8, 0.1, multiple=5) == 40        # floor >= lcm
+
+
+def test_pipeline_rejects_indivisible_chunks():
+    """An indivisible chunking must raise (plan-time validation owns the
+    degrade-to-flat decision; pipeline.py no longer silently falls
+    through)."""
+    from repro.comm.pipeline import (pipelined_all_to_all_bf16,
+                                     pipelined_moe_exchange)
+    x = jnp.zeros((4, 2, 10, 8))
+    with pytest.raises(ValueError, match="does not divide"):
+        pipelined_moe_exchange(x, lambda v: v, "model", 3)
+    with pytest.raises(ValueError, match="does not divide"):
+        pipelined_all_to_all_bf16(x, "model", 0, 0, 4)
+
+
+def test_planner_degrade_logs_reason(caplog):
+    from repro.comm import planner, topology
+    topo = topology.Topology(axis_sizes=(("model", 8),), node_size=4)
+    from repro.configs.base import CommConfig
+    with caplog.at_level("WARNING", logger="repro.comm.planner"):
+        p = planner.plan_collectives(
+            None, CommConfig(a2a_impl="pipelined", overlap_chunks=5),
+            topology=topo, msg_bytes=1 << 24, chunk_extent=64)
+    assert p.algorithm == planner.FLAT
+    assert any("degraded" in r.message for r in caplog.records)
+
+
+# ------------------------------------- multi-device transport parity -----
+
+def test_combine_bit_identical_across_formats_and_transports():
+    """THE wire-format acceptance property: with error_compensation=True
+    and an exchange that preserves its input, the decompressed combine
+    input is bit-identical to the tokens — hence bit-identical between
+    wire_format=int8 / fp8 / bf16 — on flat, hierarchical AND pipelined
+    transports (2x4 mesh, 8 forced host devices).  The scales sidecar
+    rides every transport (2-hop per hop; sliced in lockstep with slot
+    chunks on the pipelined path)."""
+    out = _run("""
+        import dataclasses
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.comm import planner as comm_planner
+        from repro.comm import wire as comm_wire
+        from repro.configs.base import CommConfig
+        from repro.core import clustering
+        from repro.core.hashing import make_rotations
+
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
+                    ("data", "model"))
+        R, e_pad, C, H, S = 4, 8, 24, 32, 8
+        n_dev = 8
+        key = jax.random.PRNGKey(0)
+        toks = jax.random.normal(key, (n_dev, e_pad, C, H))
+        rot = make_rotations(jax.random.fold_in(key, 1), 4, H, 16,
+                             jnp.float32)
+
+        def run(fmt, comm):
+            cplan = comm_planner.plan_collectives(
+                mesh, comm, axis_name="model",
+                msg_bytes=clustering.wire_bytes(e_pad, S, H, fmt),
+                chunk_extent=S)
+            codec = comm_wire.make_codec(fmt, compute_dtype="float32")
+
+            def body(t, rot):
+                t = t.reshape(e_pad, C, H)
+                valid = jnp.ones((e_pad, C), bool)
+                comp = clustering.compress(t, valid, rot, S,
+                                           "cross_polytope", True,
+                                           wire_format=fmt)
+                send = comp.centroids.reshape(R, e_pad // R, S, H)
+                ret = cplan.moe_exchange(send, lambda r: r, codec=codec)
+                eo = ret.reshape(e_pad, S, H).astype(jnp.float32)
+                return clustering.decompress(eo, comp)[None]
+
+            sm = shard_map(body, mesh=mesh,
+                           in_specs=(P(("data", "model"), None, None, None),
+                                     P(None, None, None)),
+                           out_specs=P(("data", "model"), None, None, None))
+            return np.asarray(jax.jit(sm)(toks, rot))
+
+        transports = {
+            "flat": CommConfig(a2a_impl="flat"),
+            "hierarchical": CommConfig(a2a_impl="hierarchical",
+                                       node_size=2),
+            "pipelined": CommConfig(a2a_impl="pipelined", overlap_chunks=4),
+        }
+        want = np.asarray(toks)
+        for fmt in ("bf16", "int8", "fp8"):
+            for name, comm in transports.items():
+                got = run(fmt, comm)
+                assert (got == want).all(), (fmt, name,
+                                             np.abs(got - want).max())
+        print("combine bitwise OK")
+    """)
+    assert "combine bitwise OK" in out
+
+
+def test_full_layer_wire_format_parity():
+    """Real expert MLP on the 2x4 mesh: per format, hierarchical is
+    bitwise to flat (values AND grads) and pipelined is bitwise forward /
+    allclose grads; across formats, int8/fp8 track bf16 at quantization
+    tolerance in values and gradients (straight-through VJP — identical
+    backward transport programs)."""
+    out = _run("""
+        import dataclasses
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.compat import set_mesh
+        from repro.configs.base import CommConfig, LSHConfig, MoEConfig
+        from repro.core.lsh_moe import lsh_moe_apply, lsh_moe_init
+
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
+                    ("data", "model"))
+
+        def cfg_for(fmt, comm):
+            return MoEConfig(num_experts=8, top_k=2, expert_ffn_dim=32,
+                             capacity_factor=4.0, comm=comm,
+                             lsh=LSHConfig(enabled=True, num_hashes=4,
+                                           rotation_dim=16,
+                                           compression_rate=0.5,
+                                           wire_format=fmt))
+
+        params = lsh_moe_init(jax.random.PRNGKey(0), 16,
+                              cfg_for("bf16", CommConfig()), mesh,
+                              mlp_act="swiglu", dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16))
+
+        def run(fmt, comm):
+            cfg = cfg_for(fmt, comm)
+
+            def loss(w_up, x):
+                p = dict(params, w_up=w_up)
+                return lsh_moe_apply(p, x, cfg, mesh, mlp_act="swiglu",
+                                     mode="train")[0].sum()
+
+            with set_mesh(mesh):
+                y, _ = jax.jit(lambda p, x: lsh_moe_apply(
+                    p, x, cfg, mesh, mlp_act="swiglu", mode="train"))(
+                        params, x)
+                g = jax.jit(jax.grad(loss))(params["w_up"], x)
+            return np.asarray(y), np.asarray(g)
+
+        transports = {
+            "flat": CommConfig(a2a_impl="flat"),
+            "hier": CommConfig(a2a_impl="hierarchical", node_size=2),
+            "pipe": CommConfig(a2a_impl="pipelined", overlap_chunks=4),
+        }
+        ys, gs = {}, {}
+        for fmt in ("bf16", "int8", "fp8"):
+            for t, comm in transports.items():
+                ys[fmt, t], gs[fmt, t] = run(fmt, comm)
+            assert (ys[fmt, "hier"] == ys[fmt, "flat"]).all(), fmt
+            assert (gs[fmt, "hier"] == gs[fmt, "flat"]).all(), fmt
+            assert (ys[fmt, "pipe"] == ys[fmt, "flat"]).all(), fmt
+            assert np.allclose(gs[fmt, "pipe"], gs[fmt, "flat"],
+                               atol=1e-4), fmt
+        for fmt, tol_y, tol_g in (("int8", 0.05, 0.05), ("fp8", 0.1, 0.1)):
+            dy = np.abs(ys[fmt, "flat"] - ys["bf16", "flat"]).max()
+            dg = np.abs(gs[fmt, "flat"] - gs["bf16", "flat"]).max()
+            assert dy <= tol_y * np.abs(ys["bf16", "flat"]).max(), (fmt, dy)
+            assert dg <= tol_g * np.abs(gs["bf16", "flat"]).max(), (fmt, dg)
+        print("full layer parity OK")
+    """)
+    assert "full layer parity OK" in out
+
+
+def test_hlo_a2a_operand_bytes_shrink():
+    """Bytes-on-wire regression (CI): the compiled HLO's all-to-all
+    operands (payload + scales sidecar) for wire_format=int8 must total
+    <= 0.55x of bf16 — i.e. the dispatch/combine a2a shrinks >= 1.8x."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.compat import set_mesh
+        from repro.configs.base import CommConfig, LSHConfig, MoEConfig
+        from repro.core.lsh_moe import lsh_moe_apply, lsh_moe_init
+        from repro.launch import hlo_structural
+
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
+                    ("data", "model"))
+
+        def cfg_for(fmt):
+            return MoEConfig(num_experts=8, top_k=2, expert_ffn_dim=64,
+                             capacity_factor=4.0,
+                             comm=CommConfig(a2a_impl="flat"),
+                             lsh=LSHConfig(enabled=True, num_hashes=4,
+                                           rotation_dim=32,
+                                           compression_rate=0.5,
+                                           wire_format=fmt))
+
+        H = 128
+        params = lsh_moe_init(jax.random.PRNGKey(0), H, cfg_for("bf16"),
+                              mesh, mlp_act="swiglu", dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, H))
+
+        def a2a_bytes(fmt):
+            cfg = cfg_for(fmt)
+            with set_mesh(mesh):
+                compiled = jax.jit(lambda p, x: lsh_moe_apply(
+                    p, x, cfg, mesh, mlp_act="swiglu",
+                    mode="train")).lower(params, x).compile()
+            costs = hlo_structural.analyze_text(compiled.as_text())
+            assert costs.collective_counts.get("all-to-all", 0) >= 2, costs
+            return costs.wire_bytes["all-to-all"]
+
+        b, i = a2a_bytes("bf16"), a2a_bytes("int8")
+        ratio = i / b
+        assert ratio <= 0.55, (b, i, ratio)
+        print(f"a2a bytes ratio int8/bf16 = {ratio:.3f} OK")
+    """)
+    assert "OK" in out
