@@ -69,6 +69,34 @@ def train_curve(cfg: ModelConfig, steps: int, *, seed: int = 0,
             "mesh": mesh}
 
 
+# ------------------------------------------------------- comm calibration --
+
+def measured_comm_calibration(*, ladder=(1 << 14, 1 << 17), iters=3,
+                              max_model=8):
+    """Probe the REAL transports on this host's devices (needs >= 2) and
+    fit the calibrated comm cost model (src/repro/tune/).  Returns
+    (CalibratedCostModel, host Topology), or None on a single-device
+    host.  Powers table3's modeled-vs-measured error column; report-only
+    (``store=False`` — filling the persistent cache is the
+    `python -m repro.tune` CLI's job)."""
+    n = min(max_model, len(jax.devices()))
+    if n < 2:
+        return None
+    devs = np.array(jax.devices()[:n]).reshape(1, n)
+    mesh = Mesh(devs, ("data", "model"))
+    from repro.comm.topology import Topology
+    from repro.tune.autotune import autotune
+    # Force a node boundary so the hierarchical transport gets probed too
+    # (host devices are all one process — locality detection finds none).
+    topo = Topology(axis_sizes=(("data", 1), ("model", n)),
+                    node_size=2 if n % 2 == 0 else 0)
+    choices = autotune(mesh, axis_name="model", ladder=ladder,
+                       wire_formats=("bf16",), chunk_candidates=(2,),
+                       iters=iters, store=False, include_kernels=False,
+                       topology=topo)
+    return choices.model, topo
+
+
 # ---------------------------------------------------------------- Eq. 6/7 --
 
 def paper_comm_ratio(*, flops: float, b_inter: float, k: int, w: int,

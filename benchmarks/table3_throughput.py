@@ -17,7 +17,11 @@ pipelined transports x bf16 | int8 | fp8 formats, with LSH on and off,
 so transport choice, payload compression and wire quantization are each
 attributable separately; (g) measured step time + final loss per wire
 format on this host (quantize/dequantize compute cost; the byte savings
-only pay off on real interconnects)."""
+only pay off on real interconnects); (h) modeled-vs-measured error —
+real transports probed on this host's devices (repro.tune), wall clock
+compared against the calibrated AND the static cost model so the
+calibration quality is a visible column, plus the (f) comm model
+re-priced with the measured link constants."""
 from __future__ import annotations
 
 import json
@@ -138,6 +142,50 @@ def run(out_rows, steps: int = 20):
                      f"modeled_a2a={total * 1e6:.1f}us {hops} "
                      f"(msg={msg / 2**20:.1f}MiB"
                      f"{f' chunks={chunks}' if algo == 'pipelined' else ''})"))
+    # (h) modeled-vs-measured: probe the REAL transports on this host's
+    # devices (skipped on a 1-device host) and report each cost model's
+    # error against wall clock — calibrated should beat static, and the
+    # residual IS the calibration quality.  The (f) comm model is then
+    # re-priced with the measured constants so datasheet vs measured
+    # rankings are comparable in one report.
+    from benchmarks.common import measured_comm_calibration
+    from repro.comm.topology import estimate_seconds
+    meas = measured_comm_calibration()
+    if meas is None:
+        out_rows.append(("table3/commfit_skipped", 0.0,
+                         "single-device host: no transports to measure"))
+    else:
+        calib, htopo = meas
+        htopo_cal = calib.apply(htopo)
+        for name in ("flat", "hierarchical", "pipelined"):
+            rows = [r for r in calib.measured
+                    if r.kind == "a2a" and r.name == name
+                    and r.wire_format == "bf16"]
+            if not rows:
+                continue
+            def _err(topo_):
+                errs = [abs(estimate_seconds(comm_topo.a2a_cost(
+                    topo_, "model", r.msg_bytes, r.name, chunks=r.chunks))
+                    - r.seconds) / max(r.seconds, 1e-12) for r in rows]
+                return 100.0 * sum(errs) / len(errs)
+            e_cal, e_static = _err(htopo_cal), _err(htopo)
+            mean_ms = sum(r.seconds for r in rows) / len(rows) * 1e3
+            out_rows.append(
+                (f"table3/commfit_{name}_err_pct", e_cal * 1e6,
+                 f"calibrated_err={e_cal:.0f}% static_err={e_static:.0f}% "
+                 f"(measured mean {mean_ms:.2f}ms over {len(rows)} probes)"))
+        for use_lsh in (False, True):
+            c_wire = num_lsh_slots(cap, 0.2) if use_lsh else cap
+            msg = clustering.wire_bytes(e_pad, c_wire, h,
+                                        "bf16" if use_lsh else None)
+            for algo in ("flat", "hierarchical", "pipelined"):
+                total = estimate_seconds(comm_topo.a2a_cost(
+                    calib.apply(topo), "model", msg, algo, chunks=chunks))
+                out_rows.append(
+                    (f"table3/commcal_{algo}_lsh{int(use_lsh)}_us",
+                     total * 1e12,
+                     f"calibrated_a2a={total * 1e6:.1f}us "
+                     f"(host-measured link constants on the 16x16 topo)"))
     # (g) measured wire-format axis on this host: step wall clock + final
     # loss per format (CPU measures the quantize/dequantize compute cost;
     # losses must stay at bf16 parity — the byte savings show up in (f))

@@ -55,24 +55,40 @@ def _check_divides(chunks: int, extent: int) -> None:
 
 
 def pipelined_all_to_all_bf16(x, axis_name: str, split: int, concat: int,
-                              chunks: int, *, chunk_axis: int = 2):
+                              chunks: int, *, chunk_axis: int = 2,
+                              transfer=None):
     """Flat a2a transferred in ``chunks`` slices of ``chunk_axis`` (which
     must differ from split/concat and divide evenly — indivisible chunk
     counts raise).  Bit-identical to ``all_to_all_bf16`` — each chunk is
     the same bf16-pinned primitive — but exposes K independent transfers
-    the scheduler can interleave with neighbouring compute."""
+    the scheduler can interleave with neighbouring compute.
+
+    ``transfer`` overrides the per-chunk leg (split/concat are then
+    ignored): the tuner probes the coded int8/fp8 chunked transfer
+    through here with ``comm.wire.transfer_fn``, so the timed leg is the
+    production one.  The output dtype follows the transfer's (a codec
+    decodes to its compute dtype)."""
+    if transfer is None:
+        def transfer(v):
+            return all_to_all_bf16(v, axis_name, split, concat)
+    elif chunk_axis in (split, concat):
+        raise ValueError("transfer override requires chunk_axis "
+                         "disjoint from split/concat")
     extent = x.shape[chunk_axis]
     _check_divides(chunks, extent)
     if chunks <= 1 or chunk_axis in (split, concat):
-        return all_to_all_bf16(x, axis_name, split, concat)
+        return transfer(x)
     size = extent // chunks
+    # chunk 0 outside the loop: its output dtype seeds the buffer
+    first = transfer(_slice(x, 0, size, chunk_axis))
+    out = _update(jnp.zeros(x.shape, first.dtype), first, 0, size,
+                  chunk_axis)
 
-    def body(i, out):
-        got = all_to_all_bf16(_slice(x, i, size, chunk_axis),
-                              axis_name, split, concat)
-        return _update(out, got, i, size, chunk_axis)
+    def body(i, acc):
+        got = transfer(_slice(x, i, size, chunk_axis))
+        return _update(acc, got, i, size, chunk_axis)
 
-    return jax.lax.fori_loop(0, chunks, body, jnp.zeros_like(x))
+    return jax.lax.fori_loop(1, chunks, body, out)
 
 
 def pipelined_moe_exchange(send, compute_fn, axis_name: str, chunks: int,

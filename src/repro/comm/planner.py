@@ -11,13 +11,22 @@ primitive directly.
 Selection order (docs/comm.md):
   1. explicit ``CommConfig.a2a_impl`` (anything but "auto"),
   2. ``$REPRO_COMM_IMPL``,
-  3. auto heuristic: pipelined when overlap_chunks > 1 and the slot axis
-     chunks evenly; else hierarchical when the wire axis node-factors AND
-     the message clears ``min_hierarchical_bytes``; else flat.
+  3. auto heuristic.  With a matching tuning-cache entry
+     (``CommConfig.tuning`` > ``$REPRO_TUNE`` > off; src/repro/tune/,
+     docs/tuning.md) the candidates are RANKED by measured data — probe
+     rows when the exact (transport, message size) was timed, the fitted
+     per-hop constants otherwise — and the pipelined chunk count is the
+     measured-best divisor.  Without calibration (tuning off, cache
+     miss, fingerprint mismatch) the static heuristic applies unchanged:
+     pipelined when overlap_chunks > 1 and the slot axis chunks evenly;
+     else hierarchical when the wire axis node-factors AND the message
+     clears ``min_hierarchical_bytes``; else flat — bit-identical plans
+     to the pre-tuning planner.
 Whatever is selected is then *validated against the actual mesh* and
 degraded to flat when it cannot run (unfactorable axis, indivisible chunk
 extent, axis of size 1) — ``CommPlan.reason`` records why, for logs and
-the table3 ablation.
+the table3 ablation; ``last_plan()`` keeps the most recent resolution per
+wire axis so launchers can surface it without re-planning.
 """
 from __future__ import annotations
 
@@ -44,7 +53,40 @@ AUTO = "auto"
 ALGORITHMS = (FLAT, HIERARCHICAL, PIPELINED)
 ENV_VAR = "REPRO_COMM_IMPL"
 
+# Integer codes for the per-step comm metrics (core/moe.py packs them into
+# the stats dict so transport choices are observable per training step).
+WIRE_FORMAT_IDS = {None: -1, "bf16": 0, "int8": 1, "fp8": 2}
+UNPLANNED = -1                          # decode GSPMD path: no plan at all
+
 log = logging.getLogger(__name__)
+
+_LAST_PLANS: dict = {}
+
+
+def last_plan(axis_name: str = "model") -> Optional["CommPlan"]:
+    """Most recent resolution for the axis (trace-time record; launchers
+    print its ``reason`` so degrade/tuning decisions reach the logs)."""
+    return _LAST_PLANS.get(axis_name)
+
+
+def algorithm_name(i: int) -> str:
+    return ALGORITHMS[i] if 0 <= int(i) < len(ALGORITHMS) else "unplanned"
+
+
+def wire_format_name(i: int) -> str:
+    names = {v: k for k, v in WIRE_FORMAT_IDS.items() if k is not None}
+    return names.get(int(i), "raw")
+
+
+def describe_comm_metrics(algorithm, degraded=0, calibrated=0,
+                          wire_format=-1) -> str:
+    """Human-readable step-metric summary, e.g. 'hierarchical+cal/int8'."""
+    s = algorithm_name(int(algorithm))
+    if int(degraded):
+        s += "(degraded)"
+    if int(calibrated):
+        s += "+cal"
+    return f"{s}/{wire_format_name(int(wire_format))}"
 
 
 @dataclass(frozen=True)
@@ -56,7 +98,17 @@ class CommPlan:
     intra: int                          # node-local width (hierarchical)
     chunks: int                         # slot chunks (pipelined)
     reason: str                         # how/why this algorithm was picked
-    topology: Topology
+    topology: Topology                  # calibrated link constants when
+    #                                     a tuning-cache entry matched
+    calibrated: bool = False
+
+    @property
+    def degraded(self) -> bool:
+        return self.reason.startswith("degraded")
+
+    @property
+    def algorithm_id(self) -> int:
+        return ALGORITHMS.index(self.algorithm)
 
     # -- collectives (inside shard_map bodies) ----------------------------
 
@@ -130,15 +182,77 @@ def _validate(name: str) -> str:
     return name
 
 
+def _lookup_calibration(mesh, topo, comm, axis_name):
+    """Tuning-cache lookup (None unless CommConfig.tuning/$REPRO_TUNE is
+    active AND a cache entry matches the mesh fingerprint)."""
+    from repro.tune import runtime as tune_runtime
+    return tune_runtime.calibration_for(mesh, topo, comm, axis_name)
+
+
+def _ranked_seconds(calib, topo, axis_name, msg_bytes, algorithm, *,
+                    chunks: int = 1) -> float:
+    """Measured probe time when this exact leg was probed; the fitted
+    per-hop constants otherwise."""
+    s = calib.measured_seconds(
+        algorithm, msg_bytes,
+        chunks=chunks if algorithm == PIPELINED else None)
+    if s is None:
+        s = topo_lib.estimate_seconds(topo_lib.a2a_cost(
+            topo, axis_name, msg_bytes, algorithm, chunks=chunks))
+    return s
+
+
+def _chunk_candidates(cfg_chunks: int, chunk_extent: int):
+    return [k for k in sorted({cfg_chunks, 2, 4, 8})
+            if k > 1 and chunk_extent > 0 and chunk_extent % k == 0]
+
+
+def _tuned_chunks(calib, topo, axis_name, msg_bytes, chunk_extent,
+                  cfg_chunks: int) -> int:
+    """Measured-best pipelined chunk count among the divisors; keeps the
+    configured value when the probes never timed the alternatives."""
+    best = calib.best_chunks(msg_bytes,
+                             _chunk_candidates(cfg_chunks, chunk_extent))
+    return best if best is not None else cfg_chunks
+
+
+def _auto_calibrated(calib, topo, axis_name, msg_bytes, cfg_chunks,
+                     chunk_extent):
+    """Calibrated auto: rank every transport the mesh can run by measured
+    (preferred) or fitted cost.  Pipelined competes only when overlap was
+    configured — the wire-only model cannot price the overlap win, so
+    without measured pipelined rows its k x message count makes it lose
+    to flat, which is the honest default."""
+    cands = {FLAT: (_ranked_seconds(calib, topo, axis_name, msg_bytes,
+                                    FLAT), 1)}
+    if topo.can_factor(axis_name):
+        cands[HIERARCHICAL] = (_ranked_seconds(
+            calib, topo, axis_name, msg_bytes, HIERARCHICAL), 1)
+    if cfg_chunks > 1:
+        ks = _chunk_candidates(cfg_chunks, chunk_extent)
+        scored = [(_ranked_seconds(calib, topo, axis_name, msg_bytes,
+                                   PIPELINED, chunks=k), k) for k in ks]
+        if scored:
+            cands[PIPELINED] = min(scored)
+    name = min(cands, key=lambda n: cands[n][0])
+    ranked = " ".join(f"{n}={cands[n][0] * 1e6:.0f}us"
+                      for n in sorted(cands))
+    return name, (f"auto(calibrated {calib.key[:8]}): {ranked}"), \
+        cands[name][1]
+
+
 def plan_collectives(mesh=None, comm=None, *, axis_name: str = "model",
                      msg_bytes: int = 0, chunk_extent: int = 0,
-                     topology: Optional[Topology] = None) -> CommPlan:
+                     topology: Optional[Topology] = None,
+                     calibration=None) -> CommPlan:
     """Resolve the transport for this step's collectives (trace time).
 
     ``comm`` is a ``configs.base.CommConfig`` (None = defaults);
     ``msg_bytes`` the per-rank wire-buffer size feeding the auto
     heuristic; ``chunk_extent`` the slot-axis length the pipelined path
-    would chunk.  Pass ``topology`` to bypass mesh inspection (tests)."""
+    would chunk.  Pass ``topology`` to bypass mesh inspection and
+    ``calibration`` (a ``tune.model.CalibratedCostModel``) to bypass the
+    tuning-cache lookup (tests)."""
     from repro.configs.base import CommConfig
     comm = comm or CommConfig()
     topo = topology if topology is not None else build_topology(
@@ -146,16 +260,25 @@ def plan_collectives(mesh=None, comm=None, *, axis_name: str = "model",
     if topology is not None and comm.node_size:
         topo = dataclasses.replace(topo, node_size=comm.node_size)
 
+    calib = calibration if calibration is not None \
+        else _lookup_calibration(mesh, topo, comm, axis_name)
+    if calib is not None:
+        # Same topology, measured link constants: every downstream cost
+        # (auto ranking, CommPlan.wire_cost, table3) prices calibrated.
+        topo = calib.apply(topo)
+
     requested = _validate(comm.a2a_impl or AUTO)
     reason = f"config a2a_impl={requested!r}"
     if requested == AUTO:
         requested = _validate(os.environ.get(ENV_VAR, AUTO) or AUTO)
         reason = f"${ENV_VAR}={requested!r}"
     chunks = max(1, int(comm.overlap_chunks))
-    chunkable = chunks > 1 and chunk_extent > 0 \
-        and chunk_extent % chunks == 0
     if requested == AUTO:
-        if chunkable:
+        if calib is not None:
+            requested, reason, chunks = _auto_calibrated(
+                calib, topo, axis_name, msg_bytes, chunks, chunk_extent)
+        elif chunks > 1 and chunk_extent > 0 \
+                and chunk_extent % chunks == 0:
             requested, reason = PIPELINED, \
                 f"auto: overlap_chunks={chunks} divides slot axis"
         elif topo.can_factor(axis_name) \
@@ -165,10 +288,18 @@ def plan_collectives(mesh=None, comm=None, *, axis_name: str = "model",
                 f"msg {msg_bytes}B >= {comm.min_hierarchical_bytes}B")
         else:
             requested, reason = FLAT, "auto: no hierarchy/overlap to exploit"
+    elif requested == PIPELINED and calib is not None:
+        tuned = _tuned_chunks(calib, topo, axis_name, msg_bytes,
+                              chunk_extent, chunks)
+        if tuned != chunks:
+            reason += f"; tuned overlap_chunks {chunks}->{tuned}"
+            chunks = tuned
 
     # -- degrade whatever cannot run on this mesh to flat -----------------
     r = topo.axis_size(axis_name)
     inter, intra = topo.factor(axis_name)
+    chunkable = chunks > 1 and chunk_extent > 0 \
+        and chunk_extent % chunks == 0
     if r <= 1 and requested != FLAT:
         requested, reason = FLAT, f"degraded: axis {axis_name!r} has size 1"
     elif requested == HIERARCHICAL and not topo.can_factor(axis_name):
@@ -184,9 +315,12 @@ def plan_collectives(mesh=None, comm=None, *, axis_name: str = "model",
         # silently falling through, so plan time is the ONLY place a
         # mis-sized request gets rescued — make it visible.
         log.warning("comm planner: %s -> running flat", reason)
-    return CommPlan(algorithm=requested, axis_name=axis_name, intra=intra,
+    plan = CommPlan(algorithm=requested, axis_name=axis_name, intra=intra,
                     chunks=chunks if requested == PIPELINED else 1,
-                    reason=reason, topology=topo)
+                    reason=reason, topology=topo,
+                    calibrated=calib is not None)
+    _LAST_PLANS[axis_name] = plan
+    return plan
 
 
 def flat_plan(axis_name: str = "model") -> CommPlan:

@@ -61,6 +61,16 @@ class CommConfig:
     # Auto heuristic: hierarchical only pays off above this message size
     # (the 2-hop stages a full extra intra-node copy of the buffer).
     min_hierarchical_bytes: int = 1 << 20
+    # Measurement-driven autotuning (src/repro/tune/; docs/tuning.md).
+    # Selection order: this field > $REPRO_TUNE > off.
+    #   "off"    static v5e link constants (today's behavior, bit-identical)
+    #   "cache"  rank transports with calibrated constants when a tuning
+    #            cache entry matches the mesh fingerprint; silently fall
+    #            back to static on miss/mismatch
+    #   "probe"  like "cache", plus the launchers' startup hook runs the
+    #            probes to fill a missing cache entry (the planner itself
+    #            never probes at trace time)
+    tuning: str = "off"
 
 
 @dataclass(frozen=True)

@@ -20,9 +20,14 @@ combine) dispatched through the kernel backend registry
    per step by ``comm.planner.plan_collectives`` from mesh topology +
    message size + ``cfg.comm`` — this module never calls a raw collective.
 
-2. ``moe_dense_dispatch`` — decode path: token counts are tiny, so the
-   plan is consumed without shard_map or collectives (GSPMD partitions the
-   einsums); same plan, no wire.
+2. ``moe_dense_dispatch`` — decode path: token counts are tiny.  On a
+   multi-device mesh with a model axis the exchange now goes through the
+   SAME per-step ``CommPlan`` as the training path (tokens replicated
+   along `model`, batch sharded over the dp axes), so serving meshes get
+   the planner's transport control and the tuner's tiny-message regime
+   coverage; on a 1-device model axis the plan is consumed without
+   shard_map or collectives (GSPMD partitions the einsums) exactly as
+   before.
 
 Expert weights are stored [E, H, F] sharded P(model, data, -): expert dim
 over `model` (EP), H over `data` (FSDP); the region all-gathers over `data`
@@ -81,6 +86,21 @@ def _resolve_moe_backend(cfg: MoEConfig, kernel_backend, *,
     return dispatch.resolve_backends(
         kernel_backend or cfg.kernel_backend, cfg.kernel_backend_overrides,
         off_tpu_fallback=None if lsh_active else dispatch.REFERENCE)
+
+
+def _comm_stats_vector(cplan: Optional[comm_planner.CommPlan],
+                       wire_format: Optional[str]):
+    """[algorithm_id, degraded, calibrated, wire_format_id] int32 — the
+    per-step comm observability record (models/model.py threads it into
+    the train metrics; decode with no plan reports UNPLANNED).  Decode
+    with ``comm_planner.describe_comm_metrics``."""
+    if cplan is None:
+        return jnp.array([comm_planner.UNPLANNED, 0, 0,
+                          comm_planner.WIRE_FORMAT_IDS[None]], jnp.int32)
+    return jnp.array([cplan.algorithm_id, int(cplan.degraded),
+                      int(cplan.calibrated),
+                      comm_planner.WIRE_FORMAT_IDS.get(wire_format, -1)],
+                     jnp.int32)
 
 
 def _expert_mlp(tok, w_gate, w_up, w_down, mlp_act: str):
@@ -241,7 +261,8 @@ def moe_expert_parallel(x: jax.Array, params: Dict, cfg: MoEConfig,
         out_specs=(tok_spec, P(), P(), P()),
     )(x, params["router_w"], params.get("w_gate"), params["w_up"],
       params["w_down"], params["lsh_rot"], params["placement"])
-    return y, {"aux_loss": aux, "z_loss": z, "expert_load": load}
+    return y, {"aux_loss": aux, "z_loss": z, "expert_load": load,
+               "comm": _comm_stats_vector(cplan, wire_fmt)}
 
 
 # --------------------------------------------------------------------------
@@ -253,14 +274,32 @@ def moe_dense_dispatch(x: jax.Array, params: Dict, cfg: MoEConfig,
                        kernel_backend: Optional[str] = None
                        ) -> Tuple[jax.Array, Dict]:
     """x: [B, S, H] with tiny B*S (decode).  Same plan pipeline as the
-    expert-parallel path, minus compression and collectives."""
-    B, S, H = x.shape
-    T = B * S
-    xf = x.reshape(T, H)
+    expert-parallel path, minus compression.  With a model axis of > 1
+    devices the dispatch/combine exchange runs through the per-step
+    ``CommPlan`` (value parity with the GSPMD path — tests/test_tune.py
+    pins it on 8 forced devices); otherwise GSPMD partitions the einsums
+    as before."""
     e_pad = params["w_up"].shape[0]
-    gate = top_k_gating(xf, params["router_w"], cfg.top_k, params["placement"])
-    cap = max(4, int(math.ceil(T * cfg.top_k / e_pad * 2)))
     backend = _resolve_moe_backend(cfg, kernel_backend, lsh_active=False)
+    model_r = axis_size(mesh, "model") if mesh is not None else 1
+    dp = dp_axes(mesh) if mesh is not None else ()
+    n_dp = max(1, math.prod(axis_size(mesh, a) for a in dp))
+    if model_r > 1 and x.shape[0] % n_dp == 0:
+        return _moe_dense_planned(x, params, cfg, mesh, mlp_act=mlp_act,
+                                  backend=backend, e_pad=e_pad, dp=dp,
+                                  n_dp=n_dp)
+    return _moe_dense_gspmd(x, params, cfg, mlp_act=mlp_act,
+                            backend=backend, e_pad=e_pad)
+
+
+def _moe_dense_gspmd(x, params, cfg: MoEConfig, *, mlp_act: str, backend,
+                     e_pad: int) -> Tuple[jax.Array, Dict]:
+    """Collective-free dense dispatch (1-device model axis / mesh-less
+    local mode): GSPMD partitions the einsums, no wire."""
+    B, S, H = x.shape
+    xf = x.reshape(B * S, H)
+    gate = top_k_gating(xf, params["router_w"], cfg.top_k, params["placement"])
+    cap = max(4, int(math.ceil(B * S * cfg.top_k / e_pad * 2)))
     plan = routing.build_dispatch_plan(gate.expert_ids, gate.weights,
                                        e_pad, cap, backend=backend)
     disp = routing.dispatch_tokens(plan, xf, backend=backend).astype(x.dtype)
@@ -269,4 +308,82 @@ def moe_dense_dispatch(x: jax.Array, params: Dict, cfg: MoEConfig,
     y = routing.combine_tokens(plan, eo.astype(jnp.float32), backend=backend)
     return (y.reshape(B, S, H).astype(x.dtype),
             {"aux_loss": gate.aux_loss, "z_loss": gate.z_loss,
-             "expert_load": plan.load()})
+             "expert_load": plan.load(),
+             "comm": _comm_stats_vector(None, None)})
+
+
+def _local_decode(x, router_w, w_gate, w_up, w_down, placement, *,
+                  cfg: MoEConfig, mesh: Mesh, mlp_act: str, e_pad: int,
+                  capacity: int, kernel_backend,
+                  cplan: comm_planner.CommPlan):
+    """Per-device decode body.  x: [B_loc, S, H], REPLICATED along the
+    `model` axis (decode batches are too small to shard there): every
+    model rank builds the same plan and the a2a moves each rank's blocks
+    to the peers owning their experts — real planned wire traffic in the
+    tiny-message regime the tuner probes."""
+    model_r = axis_size(mesh, "model")
+    e_local = e_pad // model_r
+    B_loc, S_loc, H = x.shape
+    xf = x.reshape(B_loc * S_loc, H)
+    gate = top_k_gating(xf, router_w, cfg.top_k, placement)
+    plan = routing.build_dispatch_plan(gate.expert_ids, gate.weights,
+                                       e_pad, capacity,
+                                       backend=kernel_backend)
+    disp = routing.dispatch_tokens(plan, xf,
+                                   backend=kernel_backend).astype(x.dtype)
+    send = disp.reshape(model_r, e_local, capacity, H)
+    data_r = axis_size(mesh, "data")
+    wg = None if w_gate is None else cplan.all_gather(w_gate, "data", 1,
+                                                      data_r)
+    wu = cplan.all_gather(w_up, "data", 1, data_r)
+    wd = cplan.all_gather(w_down, "data", 1, data_r)
+
+    def expert_chunk(recv):
+        r_, el, ck, h_ = recv.shape
+        tok = recv.transpose(1, 0, 2, 3).reshape(el, r_ * ck, h_)
+        out = _expert_mlp(tok.astype(x.dtype), wg, wu, wd, mlp_act)
+        return out.reshape(el, r_, ck, h_).transpose(1, 0, 2, 3) \
+            .astype(x.dtype)
+
+    ret = cplan.moe_exchange(send, expert_chunk)
+    expert_out = ret.reshape(e_pad, capacity, H).astype(jnp.float32)
+    y = routing.combine_tokens(plan, expert_out, backend=kernel_backend)
+    # Tokens are replicated along `model`: reduce stats over the dp axes
+    # only, or every token would be counted model_r times.
+    aux, z, load = gate.aux_loss, gate.z_loss, plan.load()
+    dp = dp_axes(mesh)
+    if dp:
+        aux = jax.lax.pmean(aux, dp)
+        z = jax.lax.pmean(z, dp)
+        load = jax.lax.psum(load, dp)
+    return y.reshape(B_loc, S_loc, H).astype(x.dtype), aux, z, load
+
+
+def _moe_dense_planned(x, params, cfg: MoEConfig, mesh: Mesh, *,
+                       mlp_act: str, backend, e_pad: int, dp, n_dp: int
+                       ) -> Tuple[jax.Array, Dict]:
+    """Decode dispatch with the exchange routed through ``CommPlan`` —
+    the same trace-time transport resolution as the training path, fed
+    the decode path's (tiny) true message size."""
+    B, S, H = x.shape
+    t_loc = (B // n_dp) * S
+    capacity = expert_capacity(t_loc, e_pad, cfg.top_k, 2.0)
+    cplan = comm_planner.plan_collectives(
+        mesh, cfg.comm, axis_name="model",
+        msg_bytes=e_pad * capacity * H * jnp.dtype(x.dtype).itemsize,
+        chunk_extent=capacity)
+    tok_spec = P(dp if len(dp) > 1 else (dp[0] if dp else None), None, None)
+    ew_spec = P("model", "data", None)
+    fn = partial(_local_decode, cfg=cfg, mesh=mesh, mlp_act=mlp_act,
+                 e_pad=e_pad, capacity=capacity, kernel_backend=backend,
+                 cplan=cplan)
+    y, aux, z, load = shard_map(
+        fn, mesh=mesh,
+        in_specs=(tok_spec, P(None, None),
+                  ew_spec if "w_gate" in params else None, ew_spec, ew_spec,
+                  P(None)),
+        out_specs=(tok_spec, P(), P(), P()),
+    )(x, params["router_w"], params.get("w_gate"), params["w_up"],
+      params["w_down"], params["placement"])
+    return y, {"aux_loss": aux, "z_loss": z, "expert_load": load,
+               "comm": _comm_stats_vector(cplan, None)}

@@ -177,10 +177,20 @@ def _lower_cell_inner(arch, shape_name, mesh, cfg, shape, *, use_lsh,
 
 
 def run_cells(arch_list, shape_list, meshes, *, use_lsh=None, out=None,
-              verbose=True):
+              verbose=True, autotune=False):
     results = []
     for mesh_name in meshes:
         mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        if autotune:
+            # Opt-in: fill the tuning cache for this (forced-host) mesh so
+            # the planner ranks transports from measured data while
+            # lowering the cells below.  Small ladder — the probes run the
+            # real collectives on every forced device.
+            from repro.tune import runtime as tune_runtime
+            os.environ.setdefault(tune_runtime.ENV_TUNE, "cache")
+            tune_runtime.ensure_calibrated(
+                mesh, None, probe=True, ladder=(1 << 14, 1 << 17),
+                wire_formats=("bf16",), iters=2)
         for arch in arch_list:
             for shape_name in shape_list:
                 tag = f"{arch}/{shape_name}/{mesh_name}"
@@ -223,13 +233,17 @@ def main():
                     choices=("single", "multi", "both"))
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--lsh", default=None, choices=("on", "off"))
+    ap.add_argument("--autotune", action="store_true",
+                    help="probe each dry-run mesh and fill the tuning "
+                         "cache before lowering (docs/tuning.md)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     use_lsh = None if args.lsh is None else (args.lsh == "on")
     archs = list(ARCH_IDS) if args.all or not args.arch else [args.arch]
     shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
-    results = run_cells(archs, shapes, meshes, use_lsh=use_lsh, out=args.out)
+    results = run_cells(archs, shapes, meshes, use_lsh=use_lsh, out=args.out,
+                        autotune=args.autotune)
     n_ok = sum(1 for r in results if "dominant" in r)
     n_skip = sum(1 for r in results if "skipped" in r)
     n_fail = sum(1 for r in results if "error" in r)

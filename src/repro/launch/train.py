@@ -49,6 +49,21 @@ def main() -> int:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--watchdog-s", type=float, default=600.0)
     ap.add_argument("--auto-restart", action="store_true")
+    ap.add_argument("--mesh-data", type=int, default=1,
+                    help="data-axis extent of the training mesh")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="model-axis extent of the training mesh (EP/TP "
+                         "wire axis — needs --mesh-data*--mesh-model "
+                         "devices)")
+    ap.add_argument("--node-size", type=int, default=0,
+                    help="devices per node along the model axis "
+                         "(0 = detect; docs/comm.md)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="probe the mesh and fill the comm tuning cache "
+                         "before step 0 (docs/tuning.md; needs a "
+                         "multi-device --mesh-model to time transports); "
+                         "also enables cache consultation for this run "
+                         "unless $REPRO_TUNE is already set")
     args = ap.parse_args()
     if args.auto_restart:
         return supervise(sys.argv[1:])
@@ -70,8 +85,29 @@ def main() -> int:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     opt = OptimizerConfig(lr=1e-3, warmup_steps=min(20, args.steps // 5),
                           total_steps=args.steps)
-    mesh = make_host_mesh(1, 1)
+    n_mesh = args.mesh_data * args.mesh_model
+    if len(jax.devices()) < n_mesh:
+        print(f"error: mesh {args.mesh_data}x{args.mesh_model} needs "
+              f"{n_mesh} devices, have {len(jax.devices())} (force host "
+              f"devices via XLA_FLAGS)", flush=True)
+        return 2
+    mesh = make_host_mesh(args.mesh_data, args.mesh_model,
+                          node_size=args.node_size)
     use_lsh = None if args.lsh is None else (args.lsh == "on")
+
+    from repro.comm import planner as comm_planner
+    from repro.tune import runtime as tune_runtime
+    comm_cfg = cfg.moe.comm if cfg.has_moe() else None
+    if args.autotune:
+        # A fresh cache nobody consults is useless: make this run read it.
+        os.environ.setdefault(tune_runtime.ENV_TUNE, "cache")
+    if cfg.has_moe() and (args.autotune
+                          or tune_runtime.tuning_mode(comm_cfg) == "probe"):
+        calib = tune_runtime.ensure_calibrated(mesh, comm_cfg,
+                                               probe=args.autotune)
+        if calib is not None:
+            print(f"[tune] calibrated comm constants active "
+                  f"(fingerprint {calib.key})", flush=True)
 
     ds = SyntheticLMDataset(cfg.vocab_size, args.seq, args.batch,
                             num_shards=jax.process_count(),
@@ -111,10 +147,22 @@ def main() -> int:
             if rebalancer is not None:
                 rebalancer.record(np.asarray(metrics["expert_load"]),
                                   placement)
+            if s == start and "comm_algorithm" in metrics:
+                p = comm_planner.last_plan()
+                if p is not None:
+                    print(f"[comm] plan: {p.algorithm} ({p.reason})",
+                          flush=True)
             if s % args.log_every == 0:
+                comm = ""
+                if "comm_algorithm" in metrics:
+                    comm = " comm=" + comm_planner.describe_comm_metrics(
+                        int(metrics["comm_algorithm"]),
+                        int(metrics["comm_degraded"]),
+                        int(metrics["comm_calibrated"]),
+                        int(metrics["comm_wire_format"]))
                 print(f"step {s} loss {loss:.4f} ce {float(metrics['ce']):.4f}"
                       f" lr {float(metrics['lr']):.2e} {dt:.2f}s "
-                      f"skips {int(metrics['grad_skips'])}", flush=True)
+                      f"skips {int(metrics['grad_skips'])}{comm}", flush=True)
             want_ckpt = mgr and (s + 1) % args.ckpt_every == 0
             if preempt.requested.is_set():
                 if mgr:

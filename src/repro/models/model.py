@@ -181,7 +181,7 @@ def _stack_forward(blocks, x, cfg: ModelConfig, mesh, *, layout, causal,
         x = x + _apply_mixer(p, h, cfg, mesh, causal=causal,
                              kv_chunk=cfg.kv_chunk, enc_states=enc_states)
         aux = z = jnp.zeros((), jnp.float32)
-        load = None
+        load = comm = None
         if ffn == DENSE:
             h = rmsnorm(p["norm2"], x, cfg.norm_eps)
             if mesh is None:            # dp_only local mode: plain matmuls
@@ -208,19 +208,24 @@ def _stack_forward(blocks, x, cfg: ModelConfig, mesh, *, layout, causal,
             x = x + y
             aux, z, load = stats["aux_loss"], stats["z_loss"], \
                 stats["expert_load"]
-        return x, aux, z, load
+            comm = stats.get("comm")
+        return x, aux, z, load, comm
 
     def body(carry, stacked):
-        x, aux, z, load = carry
+        x, aux, z, load, comm = carry
         for i, (mixer, ffn) in enumerate(layout):
             fn = partial(one_block, mixer=mixer, ffn=ffn)
             if do_remat:
                 fn = jax.checkpoint(fn, policy=policy, prevent_cse=False)
-            x, a, zz, ld = fn(stacked[i], x)
+            x, a, zz, ld, cm = fn(stacked[i], x)
             aux, z = aux + a, z + zz
             if ld is not None:
                 load = load + ld
-        return (x, aux, z, load), None
+            if cm is not None:
+                # static per-trace (same plan for every MoE layer) —
+                # overwrite, don't accumulate
+                comm = cm
+        return (x, aux, z, load, comm), None
 
     if do_remat:
         body = jax.checkpoint(body, policy=policy, prevent_cse=False)
@@ -228,9 +233,14 @@ def _stack_forward(blocks, x, cfg: ModelConfig, mesh, *, layout, causal,
     e_pad = blocks and _find_epad(blocks, layout)
     aux0 = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
             jnp.zeros((e_pad,), jnp.float32) if n_moe else
-            jnp.zeros((1,), jnp.float32))
-    (x, aux, z, load), _ = jax.lax.scan(body, (x, *aux0), tuple(blocks))
-    return x, {"aux_loss": aux, "z_loss": z, "expert_load": load}
+            jnp.zeros((1,), jnp.float32),
+            # comm sentinel: unplanned algorithm/format, flags clear
+            # (core/moe._comm_stats_vector layout)
+            jnp.array([-1, 0, 0, -1], jnp.int32))
+    (x, aux, z, load, comm), _ = jax.lax.scan(body, (x, *aux0),
+                                              tuple(blocks))
+    return x, {"aux_loss": aux, "z_loss": z, "expert_load": load,
+               "comm": comm}
 
 
 def _find_epad(blocks, layout) -> int:
@@ -304,6 +314,17 @@ def loss_fn(params, cfg: ModelConfig, mesh: Mesh, batch: Dict, *,
     total = ce + zl + moe_aux
     metrics = {"ce": ce, "z_loss": zl, "moe_aux": stats["aux_loss"],
                "expert_load": stats["expert_load"], "loss": total}
+    comm = stats.get("comm")
+    if comm is not None and cfg.has_moe():
+        # Planned-transport observability (core/moe._comm_stats_vector):
+        # which a2a ran this step, whether the planner degraded it,
+        # whether calibrated constants ranked it, and the wire format —
+        # floats so dp-only pmean over metrics stays well-typed.
+        metrics.update(
+            comm_algorithm=comm[0].astype(jnp.float32),
+            comm_degraded=comm[1].astype(jnp.float32),
+            comm_calibrated=comm[2].astype(jnp.float32),
+            comm_wire_format=comm[3].astype(jnp.float32))
     return total, metrics
 
 

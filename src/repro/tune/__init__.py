@@ -1,0 +1,51 @@
+"""Measurement-driven autotuning for the comm planner (docs/tuning.md).
+
+The comm planner (comm/planner.py) and wire formats (comm/wire.py) expose
+a discrete decision space — transport {flat, hierarchical, pipelined} x
+overlap_chunks x wire_format — ranked until now by topology.py's *static*
+v5e link constants.  This package replaces datasheet constants with
+measurement:
+
+  probe        timed microbenchmarks of the REAL collectives on the live
+               mesh (per transport x message-size ladder x wire format,
+               plus the LSH kernel ops), warmup + trimmed-mean timing
+  fingerprint  the mesh/topology/software identity that keys results
+  cache        persistent JSON tuning cache (~/.cache/repro-tune or
+               $REPRO_TUNE_CACHE), atomic writes, fingerprint-mismatch
+               invalidation
+  model        CalibratedCostModel: per-hop bytes/bw + msgs*lat constants
+               fitted from probe data; slots into topology.a2a_cost /
+               CommPlan.wire_cost behind the existing API
+  runtime      read-side glue the planner consults (CommConfig.tuning >
+               $REPRO_TUNE > off; silent static fallback on miss)
+  autotune     orchestrator: repro.tune.autotune(mesh, comm) and the CLI
+               `python -m repro.tune`
+
+Attribute access is lazy so `python -m repro.tune` can set XLA_FLAGS
+(forced host device counts) before anything imports jax.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "Fingerprint": "repro.tune.fingerprint",
+    "fingerprint_for": "repro.tune.fingerprint",
+    "ProbeResult": "repro.tune.probe",
+    "run_probe_suite": "repro.tune.probe",
+    "CalibratedCostModel": "repro.tune.model",
+    "MeasuredRow": "repro.tune.model",
+    "fit_link_constants": "repro.tune.model",
+    "TunedChoices": "repro.tune.autotune",
+    "autotune": "repro.tune.autotune",
+    "calibration_for": "repro.tune.runtime",
+    "ensure_calibrated": "repro.tune.runtime",
+    "tuning_mode": "repro.tune.runtime",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro.tune' has no attribute {name!r}")

@@ -1,0 +1,93 @@
+"""Persistent JSON tuning cache.
+
+One file per mesh fingerprint under ``$REPRO_TUNE_CACHE`` (default
+``~/.cache/repro-tune``), named ``<fingerprint-key>.json``.  Writes are
+atomic (temp file + ``os.replace`` in the same directory) so a crashed or
+preempted probe run never leaves a torn entry; reads never raise — a
+missing, corrupt, schema-stale or fingerprint-mismatched entry is logged
+with the reason and treated as a miss, which is what lets the planner
+degrade *silently* to the static constants (docs/tuning.md).
+"""
+from __future__ import annotations
+
+import json
+import logging
+import os
+import tempfile
+import time
+from typing import Optional
+
+from repro.tune.fingerprint import Fingerprint
+
+SCHEMA_VERSION = 1
+ENV_CACHE = "REPRO_TUNE_CACHE"
+
+log = logging.getLogger(__name__)
+
+
+def cache_dir() -> str:
+    return os.environ.get(ENV_CACHE) \
+        or os.path.join(os.path.expanduser("~"), ".cache", "repro-tune")
+
+
+def entry_path(fp: Fingerprint) -> str:
+    return os.path.join(cache_dir(), f"{fp.key()}.json")
+
+
+def store(fp: Fingerprint, payload: dict) -> str:
+    """Atomically write the entry for ``fp``; returns the path.  The
+    fingerprint is embedded so a renamed/copied file still self-identifies
+    (load() re-checks it against the requesting mesh)."""
+    d = cache_dir()
+    os.makedirs(d, exist_ok=True)
+    path = entry_path(fp)
+    entry = {"schema": SCHEMA_VERSION, "created_unix": time.time(),
+             "fingerprint": fp.to_dict(), **payload}
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".tmp-", suffix=".json")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(entry, f, indent=1)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    log.info("tune cache: stored %s", path)
+    return path
+
+
+def load(fp: Fingerprint) -> Optional[dict]:
+    """The validated entry for ``fp``, or None (with a logged reason) on
+    miss / corruption / schema drift / fingerprint mismatch."""
+    path = entry_path(fp)
+    if not os.path.exists(path):
+        log.debug("tune cache: no entry for %s at %s", fp.key(), path)
+        return None
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, UnicodeDecodeError, json.JSONDecodeError) as e:
+        log.warning("tune cache: unreadable entry %s (%s); ignoring it",
+                    path, e)
+        return None
+    if not isinstance(data, dict) or data.get("schema") != SCHEMA_VERSION:
+        log.warning("tune cache: schema mismatch in %s (have %r, want %r); "
+                    "ignoring it", path,
+                    data.get("schema") if isinstance(data, dict) else None,
+                    SCHEMA_VERSION)
+        return None
+    try:
+        stored = Fingerprint.from_dict(data["fingerprint"])
+    except Exception as e:  # malformed fingerprint dict
+        log.warning("tune cache: bad fingerprint in %s (%s); ignoring it",
+                    path, e)
+        return None
+    if stored != fp:
+        log.warning(
+            "tune cache: fingerprint mismatch in %s (fields: %s); "
+            "rejecting entry — re-run `python -m repro.tune` on this mesh",
+            path, ", ".join(fp.diff(stored)) or "<key collision>")
+        return None
+    return data

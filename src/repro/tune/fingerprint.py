@@ -1,0 +1,90 @@
+"""Mesh/topology/software fingerprint keying tuning-cache entries.
+
+A probe measurement is only transferable to a mesh that looks the same in
+every way the measurement depends on: device kind and count, process
+layout, logical axis shapes, the wire axis and its node factoring, the
+JAX version that compiled the collectives, and the payload dtype the
+probes ran with.  ``Fingerprint`` freezes exactly those fields;
+``key()`` is the cache file name and ``diff()`` names the fields that
+disagree so a rejection can be logged with a reason instead of silently
+missing (cache.py).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import asdict, dataclass
+from typing import List, Optional, Tuple
+
+import jax
+
+from repro.comm.topology import Topology
+
+SCHEMA_VERSION = 1
+
+
+@dataclass(frozen=True)
+class Fingerprint:
+    schema: int
+    platform: str                       # "cpu" | "gpu" | "tpu"
+    device_kind: str                    # e.g. "TPU v5e", "cpu"
+    n_devices: int
+    n_processes: int
+    axis_sizes: Tuple[Tuple[str, int], ...]
+    axis_name: str                      # the wire axis the probes ran over
+    node_size: int                      # node factoring the probes assumed
+    jax_version: str
+    wire_dtype: str = "bfloat16"        # probe payload dtype
+
+    def key(self) -> str:
+        """Stable content hash — the cache entry's file stem."""
+        blob = json.dumps(self.to_dict(), sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["axis_sizes"] = [list(p) for p in self.axis_sizes]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Fingerprint":
+        d = dict(d)
+        d["axis_sizes"] = tuple((str(a), int(n)) for a, n in d["axis_sizes"])
+        return cls(**d)
+
+    def diff(self, other: "Fingerprint") -> List[str]:
+        """Names of fields where the two fingerprints disagree."""
+        a, b = self.to_dict(), other.to_dict()
+        return sorted(k for k in a if a[k] != b.get(k))
+
+
+def _device_facts(mesh) -> Tuple[str, str, int, int]:
+    """(platform, device_kind, n_devices, n_processes) for the mesh's own
+    devices, falling back to the process-global devices when the mesh
+    carries none (topology-only unit tests)."""
+    devs = None
+    if mesh is not None:
+        try:
+            devs = list(mesh.devices.flat)
+        except Exception:
+            devs = None
+    if not devs:
+        devs = jax.devices()
+    kinds = sorted({getattr(d, "device_kind", "unknown") for d in devs})
+    procs = len({getattr(d, "process_index", 0) for d in devs})
+    return jax.default_backend(), "+".join(kinds), len(devs), procs
+
+
+def fingerprint_for(mesh, topo: Topology, axis_name: str = "model", *,
+                    wire_dtype: str = "bfloat16") -> Fingerprint:
+    """Fingerprint of (mesh, topology) — ``topo`` supplies axis shapes and
+    the node factoring (already resolved through the CommConfig >
+    $REPRO_NODE_SIZE > mesh-hint > locality chain), ``mesh`` the physical
+    device facts."""
+    platform, kind, n_dev, n_proc = _device_facts(mesh)
+    return Fingerprint(
+        schema=SCHEMA_VERSION, platform=platform, device_kind=kind,
+        n_devices=n_dev, n_processes=n_proc,
+        axis_sizes=tuple(topo.axis_sizes), axis_name=axis_name,
+        node_size=int(topo.node_size), jax_version=jax.__version__,
+        wire_dtype=str(wire_dtype))

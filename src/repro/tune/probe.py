@@ -1,0 +1,190 @@
+"""Timed microbenchmark probes: the REAL collectives on the live mesh.
+
+Each probe jits one shard_map'd transport leg — the exact primitives the
+production exchange uses (``all_to_all_bf16``, the 2-hop hierarchical
+a2a, the chunked pipelined a2a, and the coded int8/fp8 transfers with
+their scales sidecar) — on a wire tensor shaped like the MoE exchange's
+(``[R, e_local, c, H]``), and times it with warmup iterations plus a
+trimmed mean over the sample runs.  The LSH kernel hot path
+(``lsh_hash`` / ``segment_centroid`` through the kernel-backend
+registry, so $REPRO_KERNEL_BACKEND applies) is probed the same way so a
+tuning run also characterizes the compression compute cost.
+
+Results are ``model.MeasuredRow``s; ``msg_bytes`` is the per-rank
+on-wire buffer size under the probed wire format (scales sidecar
+included — the same ``clustering.wire_bytes`` accounting the planner's
+``msg_bytes`` uses).
+"""
+from __future__ import annotations
+
+import logging
+import math
+import time
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import wire as wire_lib
+from repro.comm.collectives import all_to_all_bf16
+from repro.comm.hierarchical import hierarchical_all_to_all_bf16
+from repro.comm.pipeline import pipelined_all_to_all_bf16
+from repro.comm.topology import Topology
+from repro.compat import shard_map
+from repro.core.clustering import wire_bytes
+from repro.core.hashing import make_rotations
+from repro.kernels import dispatch
+from repro.tune.model import MeasuredRow
+
+ProbeResult = MeasuredRow                # public alias
+
+log = logging.getLogger(__name__)
+
+_PROBE_HIDDEN = 128                      # H of the probe wire tensor
+
+
+def trimmed_mean(samples: Sequence[float]) -> float:
+    """Mean with the min and max dropped (when >= 4 samples) — robust to
+    the one-off scheduler hiccup without hiding real variance."""
+    xs = sorted(samples)
+    if len(xs) >= 4:
+        xs = xs[1:-1]
+    return sum(xs) / len(xs)
+
+
+def _timed(fn, args: tuple, *, warmup: int, iters: int) -> float:
+    jax.block_until_ready(fn(*args))     # compile
+    for _ in range(max(0, warmup)):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return trimmed_mean(samples)
+
+
+def _slot_count(target_bytes: int, r: int, chunks: int) -> int:
+    """Slot count c of a [R, 1, c, H] bf16 wire tensor whose per-rank
+    payload approximates ``target_bytes``, aligned so ``chunks`` always
+    divides (mirrors core/moe.num_lsh_slots)."""
+    unit = math.lcm(8, max(1, chunks))
+    c = target_bytes / (r * _PROBE_HIDDEN * 2)
+    return max(unit, int(round(c / unit)) * unit)
+
+
+def _transport_fn(transport: str, axis_name: str, *, intra: int,
+                  chunks: int, wire_format: str):
+    """One a2a leg of the probed (transport, wire_format) combination,
+    built from the production primitives."""
+    if wire_format == "bf16":
+        if transport == "flat":
+            return lambda x: all_to_all_bf16(x, axis_name, 0, 0)
+        if transport == "hierarchical":
+            return lambda x: hierarchical_all_to_all_bf16(
+                x, axis_name, intra)
+        return lambda x: pipelined_all_to_all_bf16(
+            x, axis_name, 0, 0, chunks)
+    codec = wire_lib.make_codec(wire_format)
+    if transport == "pipelined":
+        transfer = wire_lib.transfer_fn(codec, axis_name)
+        return lambda x: pipelined_all_to_all_bf16(
+            x, axis_name, 0, 0, chunks, transfer=transfer)
+    if transport == "hierarchical":
+        fwd, bwd = wire_lib.hierarchical_leaves(axis_name, intra)
+    else:
+        fwd, bwd = wire_lib.flat_leaves(axis_name)
+    return lambda x: wire_lib.coded_transfer(x, codec, fwd, bwd)
+
+
+def probe_a2a(mesh, axis_name: str, transport: str, target_bytes: int, *,
+              wire_format: str = "bf16", chunks: int = 1, intra: int = 1,
+              warmup: int = 1, iters: int = 5) -> MeasuredRow:
+    """Time one planned a2a leg on the live mesh.  The send tensor is the
+    float [R, 1, c, H] wire layout; coded formats encode in transit
+    exactly like the production exchange."""
+    r = int(mesh.shape[axis_name])
+    c = _slot_count(target_bytes, r, chunks)
+    fmt = None if wire_format == "bf16" else wire_format
+    msg = wire_bytes(r, c, _PROBE_HIDDEN, fmt)
+    spec = P(axis_name, None, None, None)
+    leg = _transport_fn(transport, axis_name, intra=intra, chunks=chunks,
+                        wire_format=wire_format)
+    fn = jax.jit(shard_map(leg, mesh=mesh, in_specs=spec, out_specs=spec))
+    x = jax.random.normal(jax.random.PRNGKey(0),
+                          (r * r, 1, c, _PROBE_HIDDEN), jnp.float32)
+    x = x.astype(jnp.bfloat16) if wire_format == "bf16" else x
+    seconds = _timed(fn, (x,), warmup=warmup, iters=iters)
+    return MeasuredRow(kind="a2a", name=transport, wire_format=wire_format,
+                       msg_bytes=int(msg), chunks=int(chunks),
+                       seconds=float(seconds))
+
+
+def probe_kernels(*, sizes: Sequence[Tuple[int, int, int]] = ((8, 256, 128),),
+                  num_hashes: int = 4, num_slots: int = 64, warmup: int = 1,
+                  iters: int = 5) -> List[MeasuredRow]:
+    """Time the LSH hash + segment-centroid hot path through the kernel
+    registry (backend resolution incl. $REPRO_KERNEL_BACKEND applies)."""
+    rows = []
+    key = jax.random.PRNGKey(1)
+    for g, c, h in sizes:
+        toks = jax.random.normal(key, (g, c, h), jnp.float32)
+        rot = make_rotations(jax.random.fold_in(key, 1), num_hashes, h,
+                             min(64, h), jnp.float32)
+        hash_fn = jax.jit(lambda t: dispatch.lsh_hash(
+            t.reshape(-1, t.shape[-1]), rot))          # op contract: [T, H]
+        rows.append(MeasuredRow(
+            kind="kernel", name="lsh_hash", wire_format="-",
+            msg_bytes=g * c * h * 4, chunks=1,
+            seconds=float(_timed(hash_fn, (toks,), warmup=warmup,
+                                 iters=iters))))
+        slots = (jnp.abs(hash_fn(toks))[:, 0] % jnp.int32(num_slots)
+                 ).reshape(g, c)
+        cent_fn = jax.jit(lambda s, t: dispatch.segment_centroid(
+            s, t, num_slots))
+        rows.append(MeasuredRow(
+            kind="kernel", name="segment_centroid", wire_format="-",
+            msg_bytes=g * c * h * 4, chunks=1,
+            seconds=float(_timed(cent_fn, (slots, toks), warmup=warmup,
+                                 iters=iters))))
+    return rows
+
+
+def run_probe_suite(mesh, topo: Topology, axis_name: str = "model", *,
+                    ladder: Sequence[int] = (1 << 16, 1 << 19, 1 << 22),
+                    wire_formats: Sequence[str] = ("bf16", "int8"),
+                    chunk_candidates: Sequence[int] = (2, 4),
+                    warmup: int = 1, iters: int = 5,
+                    include_kernels: bool = True,
+                    verbose: bool = False) -> List[MeasuredRow]:
+    """The full probe matrix for one mesh: every runnable transport x
+    wire format x message-size ladder point (pipelined additionally per
+    chunk candidate), plus the kernel ops.  Transports the topology
+    cannot run (axis of 1, unfactorable node size) are skipped — the
+    planner could never pick them here anyway."""
+    rows: List[MeasuredRow] = []
+    r = topo.axis_size(axis_name)
+    inter, intra = topo.factor(axis_name)
+    if r > 1:
+        transports = [("flat", 1)]
+        if inter > 1:
+            transports.append(("hierarchical", 1))
+        transports += [("pipelined", k) for k in chunk_candidates
+                       if k > 1]
+        for fmt in wire_formats:
+            for nbytes in ladder:
+                for name, k in transports:
+                    row = probe_a2a(mesh, axis_name, name, nbytes,
+                                    wire_format=fmt, chunks=k, intra=intra,
+                                    warmup=warmup, iters=iters)
+                    rows.append(row)
+                    if verbose:
+                        log.info("probe %s/%s %dB chunks=%d -> %.3fms",
+                                 name, fmt, row.msg_bytes, k,
+                                 row.seconds * 1e3)
+    elif verbose:
+        log.info("probe: axis %r has size 1 — no a2a rows", axis_name)
+    if include_kernels:
+        rows += probe_kernels(warmup=warmup, iters=iters)
+    return rows

@@ -1,0 +1,110 @@
+"""Read-side glue between the tuning cache and the comm planner.
+
+``plan_collectives`` calls ``calibration_for`` once per plan (trace
+time).  Tuning-mode resolution, first hit wins (docs/tuning.md):
+
+  1. ``CommConfig.tuning`` set to anything but "off",
+  2. ``$REPRO_TUNE``,
+  3. off.
+
+  off    never touch the cache — bit-identical to the static planner.
+  cache  consult the persistent cache; silent static fallback on any
+         miss / mismatch (cache.py logs the reason).
+  probe  same read path; additionally ``ensure_calibrated`` (the opt-in
+         startup hook in launch/train.py, launch/dryrun.py and the CLI)
+         RUNS the probes to fill the cache when it misses.  The planner
+         itself never probes — plan_collectives runs at trace time where
+         launching timed collectives would recurse into compilation.
+
+Parsed entries are memoized per (path, mtime, size) so per-step plan
+calls cost one ``stat``, and an updated cache file is picked up without
+restarting the process.
+"""
+from __future__ import annotations
+
+import logging
+import os
+from typing import Dict, Optional, Tuple
+
+from repro.comm.topology import Topology, build_topology
+from repro.tune import cache
+from repro.tune.fingerprint import Fingerprint, fingerprint_for
+from repro.tune.model import CalibratedCostModel
+
+ENV_TUNE = "REPRO_TUNE"
+MODES = ("off", "cache", "probe")
+
+log = logging.getLogger(__name__)
+
+_MEMO: Dict[Tuple[str, int, int], Optional[CalibratedCostModel]] = {}
+
+
+def tuning_mode(comm=None) -> str:
+    """Resolved tuning mode: CommConfig.tuning > $REPRO_TUNE > off."""
+    name = (getattr(comm, "tuning", "off") if comm is not None else "off") \
+        or "off"
+    if name == "off":
+        name = os.environ.get(ENV_TUNE, "") or "off"
+    if name not in MODES:
+        raise ValueError(f"unknown tuning mode {name!r}; "
+                         f"available: {sorted(MODES)}")
+    return name
+
+
+def _load(fp: Fingerprint) -> Optional[CalibratedCostModel]:
+    path = cache.entry_path(fp)
+    try:
+        st = os.stat(path)
+        memo_key = (path, st.st_mtime_ns, st.st_size)
+    except OSError:
+        memo_key = (path, -1, -1)
+    if memo_key in _MEMO:
+        return _MEMO[memo_key]
+    entry = cache.load(fp)
+    model = None
+    if entry is not None:
+        try:
+            model = CalibratedCostModel.from_payload(fp.key(), entry)
+        except Exception as e:  # malformed rows/constants: miss, not crash
+            log.warning("tune cache: unparseable payload in %s (%s); "
+                        "ignoring it", path, e)
+    if len(_MEMO) > 64:                  # bounded; entries are tiny
+        _MEMO.clear()
+    _MEMO[memo_key] = model
+    return model
+
+
+def calibration_for(mesh, topo: Topology, comm=None,
+                    axis_name: str = "model"
+                    ) -> Optional[CalibratedCostModel]:
+    """The calibrated cost model matching (mesh, topo), or None when
+    tuning is off or no valid cache entry exists — the planner then
+    behaves bit-identically to the static-constant path."""
+    if tuning_mode(comm) == "off":
+        return None
+    return _load(fingerprint_for(mesh, topo, axis_name))
+
+
+def ensure_calibrated(mesh, comm=None, axis_name: str = "model", *,
+                      probe: bool = False,
+                      **autotune_kwargs) -> Optional[CalibratedCostModel]:
+    """Startup hook: return the mesh's calibration, probing to create it
+    when allowed (``probe=True`` forces a probe run regardless of mode —
+    the --autotune launcher flag)."""
+    mode = tuning_mode(comm)
+    if mode == "off" and not probe:
+        return None
+    node = int(getattr(comm, "node_size", 0) or 0)
+    topo = build_topology(mesh, axis_name=axis_name, node_size=node)
+    fp = fingerprint_for(mesh, topo, axis_name)
+    model = _load(fp)
+    if model is not None:
+        return model
+    if not probe and mode != "probe":
+        log.info("tune: cache miss for %s and mode=%r — staying on static "
+                 "constants (run `python -m repro.tune` to calibrate)",
+                 fp.key(), mode)
+        return None
+    from repro.tune.autotune import autotune
+    autotune(mesh, comm, axis_name=axis_name, **autotune_kwargs)
+    return _load(fp)
