@@ -16,12 +16,12 @@ from repro.compat import set_mesh
 from repro.configs.base import (ATTN, DENSE, MOE, LSHConfig, ModelConfig,
                                 MoEConfig, OptimizerConfig)
 from repro.data.synthetic import SyntheticLMDataset
+from repro.launch.mesh import make_host_mesh
 from repro.runtime.step import init_train_state, make_train_step
 
 
 def bench_mesh() -> Mesh:
-    devs = np.array(jax.devices()[:1]).reshape(1, 1)
-    return Mesh(devs, ("data", "model"))
+    return make_host_mesh(1, 1, 1)
 
 
 def tiny_moe_config(*, lsh: bool = True, num_hashes: int = 6,
@@ -82,8 +82,7 @@ def measured_comm_calibration(*, ladder=(1 << 14, 1 << 17), iters=3,
     n = min(max_model, len(jax.devices()))
     if n < 2:
         return None
-    devs = np.array(jax.devices()[:n]).reshape(1, n)
-    mesh = Mesh(devs, ("data", "model"))
+    mesh = make_host_mesh(1, 1, n)
     from repro.comm.topology import Topology
     from repro.tune.autotune import autotune
     # Force a node boundary so the hierarchical transport gets probed too

@@ -21,7 +21,10 @@ only pay off on real interconnects); (h) modeled-vs-measured error —
 real transports probed on this host's devices (repro.tune), wall clock
 compared against the calibrated AND the static cost model so the
 calibration quality is a visible column, plus the (f) comm model
-re-priced with the measured link constants."""
+re-priced with the measured link constants; (i) pipeline rows — modeled
+1F1B bubble fraction and step time with/without the a2a-in-bubble
+overlap at 2 and 4 stages on the 3D (data, pipe, model) topology
+(docs/pipeline.md), calibrated when this host's probes ran."""
 from __future__ import annotations
 
 import json
@@ -186,6 +189,42 @@ def run(out_rows, steps: int = 20):
                      total * 1e12,
                      f"calibrated_a2a={total * 1e6:.1f}us "
                      f"(host-measured link constants on the 16x16 topo)"))
+    # (i) pipeline rows: modeled bubble fraction + step time with/without
+    # the a2a-in-bubble overlap (docs/pipeline.md) at 2 and 4 stages.
+    # Per-unit compute is anchored to the paper's measured a2a share
+    # (~45% of a no-overlap step), the a2a to the same production wire
+    # tensor as (f) (LSH bf16, per-microbatch slice), both priced on the
+    # 3D (16/S, S, 16) topology — with this host's calibrated link
+    # constants when the probes above ran.
+    from repro.runtime.pipeline_schedule import bubble_fraction
+    msg_lsh = clustering.wire_bytes(e_pad, num_lsh_slots(cap, 0.2), h,
+                                    "bf16")
+    for S in (2, 4):
+        M = 2 * S
+        topo3 = comm_topo.Topology(
+            axis_sizes=(("data", 16 // S), ("pipe", S), ("model", 16)),
+            node_size=4)
+        if meas is not None:
+            topo3 = meas[0].apply(topo3)
+        t_x = 2 * estimate_seconds(comm_topo.a2a_cost(   # dispatch+combine
+            topo3, "model", msg_lsh / M, "flat"))
+        t_u = t_x * (1 - 0.45) / 0.45     # paper: a2a ~45% of step time
+        ticks = 2 * (M + S - 1)
+        hand = estimate_seconds(comm_topo.stage_transfer_cost(
+            topo3, msg_lsh / M)) * 2 * (S - 1) * M       # fwd+bwd hand-offs
+        t_no = ticks * (t_u + t_x) + hand
+        # overlapped: each unit's exchange issues in the preceding slot (a
+        # bubble or another microbatch's compute — Schedule.a2a_slot), so
+        # only the cold-start exchange and any t_x > t_u overhang stay
+        # exposed
+        t_ov = ticks * (t_u + max(0.0, t_x - t_u)) + t_x + hand
+        bf = bubble_fraction(S, M)
+        out_rows.append(
+            (f"table3/pipeline_s{S}_overlap_speedup", t_no / t_ov * 1e6,
+             f"stages={S} microbatches={M} bubble={bf:.0%} "
+             f"step_noovl={t_no * 1e3:.2f}ms step_ovl={t_ov * 1e3:.2f}ms "
+             f"speedup={t_no / t_ov:.2f}x"
+             f"{' (calibrated)' if meas is not None else ' (static)'}"))
     # (g) measured wire-format axis on this host: step wall clock + final
     # loss per format (CPU measures the quantize/dequantize compute cost;
     # losses must stay at bf16 parity — the byte savings show up in (f))

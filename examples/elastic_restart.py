@@ -10,10 +10,8 @@ mesh's NamedShardings).
 """
 import tempfile
 
-import numpy as np
 
 import jax
-from jax.sharding import Mesh
 
 from repro.compat import set_mesh
 
@@ -23,6 +21,7 @@ from repro.configs.registry import get_smoke_config
 from repro.data.synthetic import SyntheticLMDataset
 from repro.runtime.params import param_shardings
 from repro.runtime.step import TrainState, init_train_state, make_train_step
+from repro.launch.mesh import make_host_mesh
 
 
 def main():
@@ -31,8 +30,7 @@ def main():
     ds = SyntheticLMDataset(cfg.vocab_size, 32, 4)
     ckpt = tempfile.mkdtemp(prefix="elastic_")
 
-    mesh_a = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
-                  ("data", "model"))
+    mesh_a = make_host_mesh(1, 1, 1)
     with set_mesh(mesh_a):
         state = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh_a)
         step = jax.jit(make_train_step(cfg, opt, mesh_a))
@@ -43,8 +41,7 @@ def main():
         save_checkpoint(ckpt, 3, state)
 
     # "new cluster shape": rebuild mesh, restore with ITS shardings
-    mesh_b = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
-                  ("data", "model"))
+    mesh_b = make_host_mesh(1, 1, 1)
     with set_mesh(mesh_b):
         template = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh_b)
         shardings = TrainState(

@@ -6,11 +6,9 @@ the measured wire-compression rate.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh
 
 from repro.compat import set_mesh
 
@@ -20,10 +18,11 @@ from repro.core import clustering
 from repro.core.hashing import make_rotations
 from repro.data.synthetic import SyntheticLMDataset
 from repro.runtime.step import init_train_state, make_train_step
+from repro.launch.mesh import make_host_mesh
 
 
 def main():
-    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    mesh = make_host_mesh(1, 1, 1)
     cfg = ModelConfig(
         name="quickstart-moe", family="moe", d_model=64, num_heads=4,
         num_kv_heads=2, d_ff=128, vocab_size=512,

@@ -12,12 +12,12 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh
 
 from repro.compat import set_mesh
 
 from repro.configs.registry import get_smoke_config
 from repro.models import model as model_lib
+from repro.launch.mesh import make_host_mesh
 
 
 def main():
@@ -29,7 +29,7 @@ def main():
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
-    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    mesh = make_host_mesh(1, 1, 1)
     max_len = args.prompt_len + args.gen
     with set_mesh(mesh):
         params = model_lib.init_params(jax.random.PRNGKey(0), cfg, mesh)

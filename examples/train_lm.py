@@ -13,6 +13,7 @@ import argparse
 import sys
 
 from repro.launch import train as train_mod
+from repro.launch.mesh import make_host_mesh
 
 
 def main():
@@ -22,8 +23,6 @@ def main():
     args = ap.parse_args()
 
     import jax
-    import numpy as np
-    from jax.sharding import Mesh
     from repro.configs.base import (ATTN, DENSE, MOE, LSHConfig, ModelConfig,
                                     MoEConfig, OptimizerConfig)
     from repro.checkpoint.checkpoint import CheckpointManager, load_checkpoint
@@ -47,7 +46,7 @@ def main():
           f"(active/token ~{__import__('repro.configs.base', fromlist=['active_param_count']).active_param_count(cfg) / 1e6:.1f}M)")
 
     opt = OptimizerConfig(lr=3e-4, warmup_steps=30, total_steps=args.steps)
-    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    mesh = make_host_mesh(1, 1, 1)
     ds = SyntheticLMDataset(cfg.vocab_size, 128, 8)
     mgr = CheckpointManager(args.ckpt, keep=2)
     watchdog = StepWatchdog(600.0)

@@ -22,14 +22,21 @@ Selection order (docs/comm.md):
      else hierarchical when the wire axis node-factors AND the message
      clears ``min_hierarchical_bytes``; else flat — bit-identical plans
      to the pre-tuning planner.
+Inside an active ``pipeline_context`` (a 1F1B step being traced —
+runtime/pipeline_schedule.py) auto selects the BUBBLE variant instead:
+the exchange is scheduled into the previous microbatch's pipeline bubble
+and rides a base transport picked by the same flat/hierarchical ranking
+(docs/pipeline.md — this subsumes the hier x pipe composition item).
 Whatever is selected is then *validated against the actual mesh* and
 degraded to flat when it cannot run (unfactorable axis, indivisible chunk
-extent, axis of size 1) — ``CommPlan.reason`` records why, for logs and
-the table3 ablation; ``last_plan()`` keeps the most recent resolution per
-wire axis so launchers can surface it without re-planning.
+extent, axis of size 1, bubble without a pipeline) — ``CommPlan.reason``
+records why, for logs and the table3 ablation; ``last_plan()`` keeps the
+most recent resolution per wire axis so launchers can surface it without
+re-planning.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import logging
 import os
@@ -49,8 +56,9 @@ from repro.comm.topology import Topology, build_topology
 FLAT = "flat"
 HIERARCHICAL = "hierarchical"
 PIPELINED = "pipelined"
+BUBBLE = "bubble"
 AUTO = "auto"
-ALGORITHMS = (FLAT, HIERARCHICAL, PIPELINED)
+ALGORITHMS = (FLAT, HIERARCHICAL, PIPELINED, BUBBLE)
 ENV_VAR = "REPRO_COMM_IMPL"
 
 # Integer codes for the per-step comm metrics (core/moe.py packs them into
@@ -67,6 +75,38 @@ def last_plan(axis_name: str = "model") -> Optional["CommPlan"]:
     """Most recent resolution for the axis (trace-time record; launchers
     print its ``reason`` so degrade/tuning decisions reach the logs)."""
     return _LAST_PLANS.get(axis_name)
+
+
+@dataclass(frozen=True)
+class PipelineContext:
+    """Trace-time fact that the step being traced is a 1F1B pipeline:
+    ``runtime/pipeline_schedule.py`` pushes it around stage tracing so the
+    planner can select the bubble-overlapped a2a variant without the MoE
+    layers having to thread schedule state through their signatures."""
+    stages: int
+    microbatches: int
+    bubble_fraction: float
+
+
+_PIPELINE_CTX: list = []                # stack; [-1] is the active context
+
+
+def current_pipeline_context() -> Optional[PipelineContext]:
+    return _PIPELINE_CTX[-1] if _PIPELINE_CTX else None
+
+
+@contextlib.contextmanager
+def pipeline_context(stages: int, microbatches: int,
+                     bubble_fraction: float):
+    """Activate the bubble-overlapped planner variant while tracing a
+    pipelined step.  Plans resolved outside any context are untouched —
+    1-stage meshes trace exactly the pre-pipeline plans (no HLO diff)."""
+    _PIPELINE_CTX.append(PipelineContext(int(stages), int(microbatches),
+                                         float(bubble_fraction)))
+    try:
+        yield
+    finally:
+        _PIPELINE_CTX.pop()
 
 
 def algorithm_name(i: int) -> str:
@@ -101,6 +141,7 @@ class CommPlan:
     topology: Topology                  # calibrated link constants when
     #                                     a tuning-cache entry matched
     calibrated: bool = False
+    base: str = ""                      # transport a BUBBLE plan rides
 
     @property
     def degraded(self) -> bool:
@@ -110,6 +151,16 @@ class CommPlan:
     def algorithm_id(self) -> int:
         return ALGORITHMS.index(self.algorithm)
 
+    @property
+    def transport(self) -> str:
+        """The transport that actually moves bytes: the bubble variant is
+        a SCHEDULING property (the exchange issues in the previous
+        microbatch's bubble slot) riding a base transport; everything
+        else is its own transport."""
+        if self.algorithm == BUBBLE:
+            return self.base or FLAT
+        return self.algorithm
+
     # -- collectives (inside shard_map bodies) ----------------------------
 
     def all_to_all(self, x, split: int = 0, concat: int = 0):
@@ -117,10 +168,10 @@ class CommPlan:
         requires the node-major split=concat=0 layout; other layouts (and
         tensors the planned chunk count cannot slice) fall through to
         flat."""
-        if self.algorithm == HIERARCHICAL and split == 0 and concat == 0:
+        if self.transport == HIERARCHICAL and split == 0 and concat == 0:
             return hierarchical_all_to_all_bf16(x, self.axis_name,
                                                 self.intra)
-        if self.algorithm == PIPELINED and x.ndim > 2 \
+        if self.transport == PIPELINED and x.ndim > 2 \
                 and x.shape[2] % self.chunks == 0:
             return pipelined_all_to_all_bf16(x, self.axis_name, split,
                                              concat, self.chunks)
@@ -147,21 +198,21 @@ class CommPlan:
         straight-through backward.  None keeps the raw bf16-pinned path
         (the use_lsh=False baseline) byte-identical."""
         if codec is not None:
-            if self.algorithm == PIPELINED:
+            if self.transport == PIPELINED:
                 return pipelined_moe_exchange(
                     send, compute_fn, self.axis_name, self.chunks,
                     transfer=wire_lib.transfer_fn(codec, self.axis_name))
-            if self.algorithm == HIERARCHICAL:
+            if self.transport == HIERARCHICAL:
                 fwd, bwd = wire_lib.hierarchical_leaves(self.axis_name,
                                                         self.intra)
             else:
                 fwd, bwd = wire_lib.flat_leaves(self.axis_name)
             return wire_lib.coded_moe_exchange(send, compute_fn, codec,
                                                fwd, bwd)
-        if self.algorithm == PIPELINED:
+        if self.transport == PIPELINED:
             return pipelined_moe_exchange(send, compute_fn, self.axis_name,
                                           self.chunks)
-        if self.algorithm == HIERARCHICAL:
+        if self.transport == HIERARCHICAL:
             return hierarchical_moe_exchange(send, compute_fn,
                                              self.axis_name, self.intra)
         recv = all_to_all_bf16(send, self.axis_name, 0, 0)
@@ -170,9 +221,12 @@ class CommPlan:
     # -- diagnostics ------------------------------------------------------
 
     def wire_cost(self, msg_bytes: float):
-        """Modeled per-hop cost of one planned a2a (topology cost model)."""
+        """Modeled per-hop cost of one planned a2a (topology cost model).
+        A bubble plan is priced as its base transport — the overlap win
+        (hiding those seconds in the 1F1B bubble) is a schedule-level
+        discount applied by the caller (benchmarks/table3)."""
         return topo_lib.a2a_cost(self.topology, self.axis_name, msg_bytes,
-                                 self.algorithm, chunks=self.chunks)
+                                 self.transport, chunks=self.chunks)
 
 
 def _validate(name: str) -> str:
@@ -267,14 +321,41 @@ def plan_collectives(mesh=None, comm=None, *, axis_name: str = "model",
         # (auto ranking, CommPlan.wire_cost, table3) prices calibrated.
         topo = calib.apply(topo)
 
+    ctx = current_pipeline_context()
+    pipelining = ctx is not None and ctx.stages > 1 and ctx.microbatches > 1
+
+    def _bubble_base() -> tuple:
+        """Transport the bubble variant rides: the calibrated flat/hier
+        ranking when probes matched, the static hierarchy heuristic
+        otherwise (this is where the carried-over hier x pipe composition
+        lands — a hierarchical a2a issued into the bubble slot)."""
+        if calib is not None:
+            name, why, _ = _auto_calibrated(calib, topo, axis_name,
+                                            msg_bytes, 1, 0)
+            return name, why
+        if topo.can_factor(axis_name) \
+                and msg_bytes >= comm.min_hierarchical_bytes:
+            return HIERARCHICAL, (
+                f"axis factors {topo.factor(axis_name)}")
+        return FLAT, "no hierarchy to exploit"
+
     requested = _validate(comm.a2a_impl or AUTO)
     reason = f"config a2a_impl={requested!r}"
     if requested == AUTO:
         requested = _validate(os.environ.get(ENV_VAR, AUTO) or AUTO)
         reason = f"${ENV_VAR}={requested!r}"
     chunks = max(1, int(comm.overlap_chunks))
+    base = ""
     if requested == AUTO:
-        if calib is not None:
+        if pipelining and topo.axis_size(axis_name) > 1:
+            base, base_why = _bubble_base()
+            requested = BUBBLE
+            reason = (
+                f"auto: a2a of microbatch k issues in the 1F1B bubble of "
+                f"k-1 (stages={ctx.stages}, microbatches={ctx.microbatches},"
+                f" bubble={ctx.bubble_fraction:.0%}); base={base}"
+                f" ({base_why})")
+        elif calib is not None:
             requested, reason, chunks = _auto_calibrated(
                 calib, topo, axis_name, msg_bytes, chunks, chunk_extent)
         elif chunks > 1 and chunk_extent > 0 \
@@ -288,6 +369,9 @@ def plan_collectives(mesh=None, comm=None, *, axis_name: str = "model",
                 f"msg {msg_bytes}B >= {comm.min_hierarchical_bytes}B")
         else:
             requested, reason = FLAT, "auto: no hierarchy/overlap to exploit"
+    elif requested == BUBBLE and pipelining:
+        base, base_why = _bubble_base()
+        reason += f"; base={base} ({base_why})"
     elif requested == PIPELINED and calib is not None:
         tuned = _tuned_chunks(calib, topo, axis_name, msg_bytes,
                               chunk_extent, chunks)
@@ -302,6 +386,10 @@ def plan_collectives(mesh=None, comm=None, *, axis_name: str = "model",
         and chunk_extent % chunks == 0
     if r <= 1 and requested != FLAT:
         requested, reason = FLAT, f"degraded: axis {axis_name!r} has size 1"
+    elif requested == BUBBLE and not pipelining:
+        requested, reason = FLAT, (
+            "degraded: bubble-overlapped a2a requested without an active "
+            "1F1B pipeline (no pipe axis, 1 stage, or 1 microbatch)")
     elif requested == HIERARCHICAL and not topo.can_factor(axis_name):
         requested, reason = FLAT, (
             f"degraded: axis {axis_name!r} (size {r}) does not factor at "
@@ -318,8 +406,35 @@ def plan_collectives(mesh=None, comm=None, *, axis_name: str = "model",
     plan = CommPlan(algorithm=requested, axis_name=axis_name, intra=intra,
                     chunks=chunks if requested == PIPELINED else 1,
                     reason=reason, topology=topo,
-                    calibrated=calib is not None)
+                    calibrated=calib is not None,
+                    base=base if requested == BUBBLE else "")
     _LAST_PLANS[axis_name] = plan
+    return plan
+
+
+def plan_stage_transfers(mesh=None, comm=None, *, msg_bytes: int = 0,
+                         topology: Optional[Topology] = None) -> CommPlan:
+    """Record the planned stage-boundary activation hand-off on the
+    ``pipe`` axis (a point-to-point send to the next stage, not an a2a).
+    Priced by ``topology.stage_transfer_cost``; kept in
+    ``last_plan('pipe')`` so launchers can surface the pipeline's comm
+    decision next to the MoE one."""
+    from repro.configs.base import CommConfig
+    comm = comm or CommConfig()
+    topo = topology if topology is not None else build_topology(
+        mesh, axis_name="pipe", node_size=comm.node_size)
+    r = topo.axis_size("pipe")
+    inter, intra = topo.factor("pipe")
+    if r > 1:
+        cost = topo_lib.estimate_seconds(topo_lib.stage_transfer_cost(
+            topo, msg_bytes))
+        reason = (f"pipeline: {r - 1} stage hand-offs of {msg_bytes}B per "
+                  f"microbatch (~{cost * 1e6:.0f}us each)")
+    else:
+        reason = "degraded: axis 'pipe' has size 1 — no stage hand-offs"
+    plan = CommPlan(FLAT, "pipe", intra=intra, chunks=1, reason=reason,
+                    topology=topo)
+    _LAST_PLANS["pipe"] = plan
     return plan
 
 

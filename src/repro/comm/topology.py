@@ -148,6 +148,10 @@ def a2a_cost(topo: Topology, axis_name: str, msg_bytes: float,
       pipelined     flat decomposition with every message split K ways;
                     bytes unchanged, message count x K — the win (overlap
                     with compute) is not visible to a wire-only model.
+      bubble        priced as its base transport (the planner resolves
+                    the base); the overlap win — those seconds hidden in
+                    the 1F1B bubble — is a schedule-level discount the
+                    caller applies (benchmarks/table3, docs/pipeline.md).
     """
     r = topo.axis_size(axis_name)
     if r <= 1:
@@ -166,6 +170,20 @@ def a2a_cost(topo: Topology, axis_name: str, msg_bytes: float,
         hops.append(_hop(topo, "inter", off_node * k,
                          msg_bytes * off_node / r))
     return tuple(h for h in hops if h.messages > 0)
+
+
+def stage_transfer_cost(topo: Topology, msg_bytes: float,
+                        axis_name: str = "pipe") -> Tuple[HopCost, ...]:
+    """Per-rank cost of ONE stage-boundary activation hand-off over the
+    pipeline axis: a single point-to-point message to the next stage.
+    Production meshes carve the pipe axis out of the (host-spanning) data
+    dimension, so the hop crosses the slow link unless the whole axis
+    fits inside one node."""
+    r = topo.axis_size(axis_name)
+    if r <= 1:
+        return ()
+    hop = "intra" if 0 < r <= topo.node_size else "inter"
+    return (_hop(topo, hop, 1, float(msg_bytes)),)
 
 
 def estimate_seconds(costs: Tuple[HopCost, ...]) -> float:

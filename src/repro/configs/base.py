@@ -144,6 +144,9 @@ class ModelConfig:
     remat_policy: str = "nothing"       # nothing|dots|full  (full = no remat)
     train_microbatch: int = 0           # grad-accumulation microbatch (rows)
     dp_only: bool = False               # pure-DP profile (small models)
+    # 1F1B microbatch count on a pipe>1 mesh (0 = one per stage);
+    # ignored on meshes without a pipe axis (runtime/pipeline_schedule.py).
+    pipeline_microbatches: int = 0
     # Attention chunking (flash-style exact online softmax)
     q_chunk: int = 512
     kv_chunk: int = 1024

@@ -177,10 +177,11 @@ def _lower_cell_inner(arch, shape_name, mesh, cfg, shape, *, use_lsh,
 
 
 def run_cells(arch_list, shape_list, meshes, *, use_lsh=None, out=None,
-              verbose=True, autotune=False):
+              verbose=True, autotune=False, pipe=1):
     results = []
     for mesh_name in meshes:
-        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"),
+                                    pipe=pipe)
         if autotune:
             # Opt-in: fill the tuning cache for this (forced-host) mesh so
             # the planner ranks transports from measured data while
@@ -231,6 +232,10 @@ def main():
     ap.add_argument("--shape", default=None, choices=list(SHAPES))
     ap.add_argument("--mesh", default="single",
                     choices=("single", "multi", "both"))
+    ap.add_argument("--mesh-pipe", type=int, default=1,
+                    help="carve a pipe axis of this extent out of the "
+                         "data dimension of each dry-run mesh "
+                         "(docs/pipeline.md)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--lsh", default=None, choices=("on", "off"))
     ap.add_argument("--autotune", action="store_true",
@@ -243,7 +248,7 @@ def main():
     shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     results = run_cells(archs, shapes, meshes, use_lsh=use_lsh, out=args.out,
-                        autotune=args.autotune)
+                        autotune=args.autotune, pipe=args.mesh_pipe)
     n_ok = sum(1 for r in results if "dominant" in r)
     n_skip = sum(1 for r in results if "skipped" in r)
     n_fail = sum(1 for r in results if "error" in r)

@@ -173,6 +173,8 @@ def analyze(compiled) -> Roofline:
     """
     from repro.launch import hlo_structural
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # JAX 0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     st = hlo_structural.analyze_text(compiled.as_text())
     r = Roofline(

@@ -27,7 +27,7 @@ def main() -> int:
     from repro.models import model as model_lib
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    mesh = make_host_mesh(1, 1)
+    mesh = make_host_mesh(1, 1, 1)
     B = args.batch_slots
     max_len = args.prompt_len + args.gen
 

@@ -55,6 +55,12 @@ def main() -> int:
                     help="model-axis extent of the training mesh (EP/TP "
                          "wire axis — needs --mesh-data*--mesh-model "
                          "devices)")
+    ap.add_argument("--mesh-pipe", type=int, default=1,
+                    help="pipeline-stage axis extent (1 = no pipe axis; "
+                         ">1 runs the 1F1B schedule, docs/pipeline.md)")
+    ap.add_argument("--pipeline-microbatches", type=int, default=0,
+                    help="microbatches per step under --mesh-pipe > 1 "
+                         "(0 = one per stage)")
     ap.add_argument("--node-size", type=int, default=0,
                     help="devices per node along the model axis "
                          "(0 = detect; docs/comm.md)")
@@ -85,13 +91,16 @@ def main() -> int:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     opt = OptimizerConfig(lr=1e-3, warmup_steps=min(20, args.steps // 5),
                           total_steps=args.steps)
-    n_mesh = args.mesh_data * args.mesh_model
+    if args.mesh_pipe > 1:
+        cfg = cfg.replace(pipeline_microbatches=args.pipeline_microbatches)
+    n_mesh = args.mesh_data * args.mesh_pipe * args.mesh_model
     if len(jax.devices()) < n_mesh:
-        print(f"error: mesh {args.mesh_data}x{args.mesh_model} needs "
-              f"{n_mesh} devices, have {len(jax.devices())} (force host "
-              f"devices via XLA_FLAGS)", flush=True)
+        print(f"error: mesh {args.mesh_data}x{args.mesh_pipe}x"
+              f"{args.mesh_model} needs {n_mesh} devices, have "
+              f"{len(jax.devices())} (force host devices via XLA_FLAGS)",
+              flush=True)
         return 2
-    mesh = make_host_mesh(args.mesh_data, args.mesh_model,
+    mesh = make_host_mesh(args.mesh_data, args.mesh_pipe, args.mesh_model,
                           node_size=args.node_size)
     use_lsh = None if args.lsh is None else (args.lsh == "on")
 

@@ -167,9 +167,43 @@ def _infer_mixer_kind(p) -> str:
     return SLSTM
 
 
+def stage_bounds(num_super_blocks: int, stages: int) -> Tuple[Tuple[int, int], ...]:
+    """Even partition of the super-block scan into pipeline stages.
+
+    The cut points are chosen at SUPER-BLOCK granularity: ``layout``
+    repeats once per super-block, so every stage owns at least one full
+    layout repeat and therefore keeps its MoE blocks (the per-stage a2a
+    the 1F1B schedule hides in the bubbles).  Earlier stages take the
+    remainder so the deepest (last) stage — which also carries the head —
+    is never the widest."""
+    if stages < 1:
+        raise ValueError(f"stages={stages} must be >= 1")
+    if stages > num_super_blocks:
+        raise ValueError(
+            f"stages={stages} > num_super_blocks={num_super_blocks}: every "
+            f"stage needs >= 1 super-block (one full layout repeat)")
+    base, rem = divmod(num_super_blocks, stages)
+    bounds, start = [], 0
+    for s in range(stages):
+        width = base + (1 if s < rem else 0)
+        bounds.append((start, start + width))
+        start += width
+    return tuple(bounds)
+
+
+def stage_blocks(blocks, start: int, stop: int):
+    """Slice the stacked [NSB, ...] block params down to one stage's
+    sub-stack — the per-stage scan operates on the same leaves, so
+    splitting one scan into consecutive stage scans is value-identical."""
+    return jax.tree.map(lambda a: a[start:stop], blocks)
+
+
 def _stack_forward(blocks, x, cfg: ModelConfig, mesh, *, layout, causal,
-                   use_lsh=None, enc_states=None, moe_mode="train"):
-    """Scan over super-blocks. blocks: list of stacked pytrees per entry."""
+                   use_lsh=None, enc_states=None, moe_mode="train",
+                   init_stats=None):
+    """Scan over super-blocks. blocks: list of stacked pytrees per entry.
+    ``init_stats`` threads the (aux, z, load, comm) carry across stage
+    boundaries when the stack is partitioned (pipeline_schedule.py)."""
     policy = _remat_policy(cfg.remat_policy)
     do_remat = policy is not None and cfg.remat_policy != "full"
 
@@ -229,14 +263,17 @@ def _stack_forward(blocks, x, cfg: ModelConfig, mesh, *, layout, causal,
 
     if do_remat:
         body = jax.checkpoint(body, policy=policy, prevent_cse=False)
-    n_moe = sum(1 for _, f in layout if f == MOE)
-    e_pad = blocks and _find_epad(blocks, layout)
-    aux0 = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
-            jnp.zeros((e_pad,), jnp.float32) if n_moe else
-            jnp.zeros((1,), jnp.float32),
-            # comm sentinel: unplanned algorithm/format, flags clear
-            # (core/moe._comm_stats_vector layout)
-            jnp.array([-1, 0, 0, -1], jnp.int32))
+    if init_stats is not None:
+        aux0 = init_stats
+    else:
+        n_moe = sum(1 for _, f in layout if f == MOE)
+        e_pad = blocks and _find_epad(blocks, layout)
+        aux0 = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+                jnp.zeros((e_pad,), jnp.float32) if n_moe else
+                jnp.zeros((1,), jnp.float32),
+                # comm sentinel: unplanned algorithm/format, flags clear
+                # (core/moe._comm_stats_vector layout)
+                jnp.array([-1, 0, 0, -1], jnp.int32))
     (x, aux, z, load, comm), _ = jax.lax.scan(body, (x, *aux0),
                                               tuple(blocks))
     return x, {"aux_loss": aux, "z_loss": z, "expert_load": load,
@@ -271,6 +308,26 @@ def _encode(params, cfg: ModelConfig, mesh, frames: jax.Array):
     return rmsnorm(enc["final_norm"], x, cfg.norm_eps)
 
 
+def stats_carry(stats: Dict) -> Tuple:
+    """stats dict -> the (aux, z, load, comm) scan carry, for threading a
+    partitioned stack across stage boundaries (pipeline_schedule.py)."""
+    return (stats["aux_loss"], stats["z_loss"], stats["expert_load"],
+            stats["comm"])
+
+
+def head_logits(params, cfg: ModelConfig, mesh, x: jax.Array) -> jax.Array:
+    """Final norm + (tied) unembedding -> vocab-sharded f32 logits.
+    ``params`` needs "final_norm" and "embed"/"head" only — the last
+    pipeline stage calls this with just its own slice."""
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    x = constrain(x, mesh, "batch", "seq", None)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = (x @ params["head"]["w"]).astype(jnp.float32)
+    return constrain(logits, mesh, "batch", None, "vocab")
+
+
 def forward(params, cfg: ModelConfig, mesh: Mesh, batch: Dict, *,
             use_lsh: Optional[bool] = None, moe_mode: str = "train"
             ) -> Tuple[jax.Array, Dict]:
@@ -283,19 +340,13 @@ def forward(params, cfg: ModelConfig, mesh: Mesh, batch: Dict, *,
                               layout=cfg.layout, causal=True,
                               use_lsh=use_lsh, enc_states=enc_states,
                               moe_mode=moe_mode)
-    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    x = constrain(x, mesh, "batch", "seq", None)
-    if cfg.tie_embeddings:
-        logits = unembed(params["embed"], x)
-    else:
-        logits = (x @ params["head"]["w"]).astype(jnp.float32)
-    logits = constrain(logits, mesh, "batch", None, "vocab")
-    return logits, stats
+    return head_logits(params, cfg, mesh, x), stats
 
 
-def loss_fn(params, cfg: ModelConfig, mesh: Mesh, batch: Dict, *,
-            use_lsh: Optional[bool] = None) -> Tuple[jax.Array, Dict]:
-    logits, stats = forward(params, cfg, mesh, batch, use_lsh=use_lsh)
+def loss_from_logits(cfg: ModelConfig, logits: jax.Array, stats: Dict,
+                     batch: Dict) -> Tuple[jax.Array, Dict]:
+    """CE + z-loss + MoE aux from already-computed logits — the tail the
+    last pipeline stage shares with the monolithic ``loss_fn``."""
     labels = batch["labels"]
     if cfg.frontend == "patch_stub" and "patch_embeds" in batch:
         npatch = batch["patch_embeds"].shape[1]
@@ -326,6 +377,12 @@ def loss_fn(params, cfg: ModelConfig, mesh: Mesh, batch: Dict, *,
             comm_calibrated=comm[2].astype(jnp.float32),
             comm_wire_format=comm[3].astype(jnp.float32))
     return total, metrics
+
+
+def loss_fn(params, cfg: ModelConfig, mesh: Mesh, batch: Dict, *,
+            use_lsh: Optional[bool] = None) -> Tuple[jax.Array, Dict]:
+    logits, stats = forward(params, cfg, mesh, batch, use_lsh=use_lsh)
+    return loss_from_logits(cfg, logits, stats, batch)
 
 
 # ---------------------------------------------------------------- decode ----

@@ -4,7 +4,16 @@ This shim keeps old import paths working one release; new code should go
 through ``repro.comm`` (the planner) or ``repro.comm.collectives`` (the
 raw bf16 primitives).  See docs/comm.md.
 """
+import warnings
+
 from repro.comm.collectives import (all_gather_bf16,  # noqa: F401
                                     all_to_all_bf16, reduce_scatter_bf16)
+
+# One warning per process (module init runs once per interpreter): loud
+# enough for CI logs, silent on the second import.
+warnings.warn(
+    "repro.runtime.bfcoll is deprecated; import from "
+    "repro.comm.collectives instead (docs/comm.md)",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["all_gather_bf16", "reduce_scatter_bf16", "all_to_all_bf16"]

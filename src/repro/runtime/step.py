@@ -25,21 +25,26 @@ def init_train_state(key, cfg: ModelConfig, opt_cfg: OptimizerConfig,
     return TrainState(params, adamw_init(params, opt_cfg))
 
 
-def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, mesh: Mesh,
-                    *, use_lsh: Optional[bool] = None, microbatch: int = 0):
-    """Returns train_step(state, batch) -> (state, metrics).
+def apply_gradients(state: TrainState, opt_cfg: OptimizerConfig, l, metrics,
+                    grads) -> Tuple[TrainState, Dict]:
+    """Shared optimizer tail (lr schedule, NaN-skip, adamw) — used by the
+    monolithic step below and the 1F1B pipeline step
+    (runtime/pipeline_schedule.py)."""
+    lr = warmup_cosine(state.opt.step, opt_cfg.lr, opt_cfg.warmup_steps,
+                       opt_cfg.total_steps)
+    skip = ~jnp.isfinite(l)
+    new_params, new_opt = adamw_update(state.params, grads, state.opt,
+                                       opt_cfg, lr, skip=skip)
+    metrics = dict(metrics, lr=lr, grad_skips=new_opt.grad_skips)
+    return TrainState(new_params, new_opt), metrics
 
-    microbatch > 0: gradient accumulation over batch splits via lax.scan
-    (sequential re-use of the same activation memory).
 
-    cfg.dp_only: pure data parallelism — the whole fwd/bwd runs LOCALLY
-    inside one shard_map over every mesh axis (params replicated), with a
-    single bf16 gradient pmean at the end.  This is the right profile for
-    sub-1B models on a 256-chip mesh: GSPMD TP otherwise inserts per-scan-
-    step weight-grad all-reduces (recurrent layers) and activation
-    exchanges that dwarf the compute."""
-    if cfg.dp_only and mesh.devices.size > 1:
-        return _make_dp_only_train_step(cfg, opt_cfg, mesh, use_lsh=use_lsh)
+def make_accum_grad_fn(cfg: ModelConfig, mesh: Mesh, *,
+                       use_lsh: Optional[bool] = None, microbatch: int = 0):
+    """accum_grads(params, batch) -> (loss, metrics, grads): monolithic
+    (unstaged) forward/backward, with lax.scan gradient accumulation when
+    microbatch > 0 — the numerics reference the pipeline schedule must
+    match bit for bit (tests/test_pipeline.py)."""
 
     def loss(params, batch):
         return model_lib.loss_fn(params, cfg, mesh, batch, use_lsh=use_lsh)
@@ -78,15 +83,42 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, mesh: Mesh,
         metrics = jax.tree.map(lambda m: m[-1], metrics)
         return l, metrics, grads
 
+    return accum_grads
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, mesh: Mesh,
+                    *, use_lsh: Optional[bool] = None, microbatch: int = 0):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    microbatch > 0: gradient accumulation over batch splits via lax.scan
+    (sequential re-use of the same activation memory).
+
+    A mesh with a ``pipe`` axis of size > 1 dispatches to the 1F1B
+    pipeline schedule (runtime/pipeline_schedule.py) — bit-identical
+    numerics, stage-partitioned stack, a2a planned into the bubbles.
+
+    cfg.dp_only: pure data parallelism — the whole fwd/bwd runs LOCALLY
+    inside one shard_map over every mesh axis (params replicated), with a
+    single bf16 gradient pmean at the end.  This is the right profile for
+    sub-1B models on a 256-chip mesh: GSPMD TP otherwise inserts per-scan-
+    step weight-grad all-reduces (recurrent layers) and activation
+    exchanges that dwarf the compute."""
+    if mesh is not None and "pipe" in mesh.axis_names \
+            and int(mesh.shape["pipe"]) > 1:
+        if cfg.dp_only:
+            raise NotImplementedError(
+                "dp_only and a pipe axis are mutually exclusive profiles")
+        from repro.runtime.pipeline_schedule import make_pipeline_train_step
+        return make_pipeline_train_step(cfg, opt_cfg, mesh, use_lsh=use_lsh)
+    if cfg.dp_only and mesh.devices.size > 1:
+        return _make_dp_only_train_step(cfg, opt_cfg, mesh, use_lsh=use_lsh)
+
+    accum_grads = make_accum_grad_fn(cfg, mesh, use_lsh=use_lsh,
+                                     microbatch=microbatch)
+
     def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
         l, metrics, grads = accum_grads(state.params, batch)
-        lr = warmup_cosine(state.opt.step, opt_cfg.lr, opt_cfg.warmup_steps,
-                           opt_cfg.total_steps)
-        skip = ~jnp.isfinite(l)
-        new_params, new_opt = adamw_update(state.params, grads, state.opt,
-                                           opt_cfg, lr, skip=skip)
-        metrics = dict(metrics, lr=lr, grad_skips=new_opt.grad_skips)
-        return TrainState(new_params, new_opt), metrics
+        return apply_gradients(state, opt_cfg, l, metrics, grads)
 
     return train_step
 
@@ -135,13 +167,7 @@ def _make_dp_only_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
         l, metrics, grads = shard_map(
             local_step, mesh=mesh, in_specs=(rep, bspec),
             out_specs=(P(), P(), P()))(state.params, batch)
-        lr = warmup_cosine(state.opt.step, opt_cfg.lr, opt_cfg.warmup_steps,
-                           opt_cfg.total_steps)
-        skip = ~jnp.isfinite(l)
-        new_params, new_opt = adamw_update(state.params, grads, state.opt,
-                                           opt_cfg, lr, skip=skip)
-        metrics = dict(metrics, lr=lr, grad_skips=new_opt.grad_skips)
-        return TrainState(new_params, new_opt), metrics
+        return apply_gradients(state, opt_cfg, l, metrics, grads)
 
     return train_step
 

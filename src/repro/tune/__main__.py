@@ -66,7 +66,7 @@ def main(argv=None) -> int:
         print(f"error: mesh {args.data}x{model} needs {args.data * model} "
               f"devices, have {n}", file=sys.stderr)
         return 2
-    mesh = make_host_mesh(args.data, model, node_size=args.node_size)
+    mesh = make_host_mesh(args.data, 1, model, node_size=args.node_size)
     ladder = tuple(int(b) for b in args.ladder.split(",") if b) \
         or DEFAULT_LADDER
     choices = autotune(

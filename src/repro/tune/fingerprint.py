@@ -30,6 +30,9 @@ class Fingerprint:
     device_kind: str                    # e.g. "TPU v5e", "cpu"
     n_devices: int
     n_processes: int
+    # Every logical mesh axis, in order — a 3D (data, pipe, model) mesh
+    # fingerprints differently from the 2D mesh with the same chip count,
+    # so stage-transfer probe rows never leak across pipeline layouts.
     axis_sizes: Tuple[Tuple[str, int], ...]
     axis_name: str                      # the wire axis the probes ran over
     node_size: int                      # node factoring the probes assumed

@@ -40,7 +40,7 @@ _LAT_RANGE = (0.0, 1.0)                 # s per message
 @dataclass(frozen=True)
 class MeasuredRow:
     """One probe measurement (probe.py) / cache row."""
-    kind: str                           # "a2a" | "kernel"
+    kind: str                           # "a2a" | "kernel" | "stage"
     name: str                           # transport name or kernel op
     wire_format: str                    # "bf16" | "int8" | "fp8" | "-"
     msg_bytes: int                      # per-rank wire-buffer bytes

@@ -151,6 +151,31 @@ def probe_kernels(*, sizes: Sequence[Tuple[int, int, int]] = ((8, 256, 128),),
     return rows
 
 
+def probe_stage_transfer(mesh, target_bytes: int, *,
+                         axis_name: str = "pipe", warmup: int = 1,
+                         iters: int = 5) -> MeasuredRow:
+    """Time one stage-boundary activation hand-off over the pipeline
+    axis: a single-neighbor ``ppermute`` shift — the collective the 1F1B
+    schedule's ``stage_transfer`` resharding lowers to (docs/pipeline.md).
+    The payload is a bf16 activation-shaped [c, H] buffer per rank."""
+    p = int(mesh.shape[axis_name])
+    c = max(8, int(round(target_bytes / (_PROBE_HIDDEN * 2) / 8)) * 8)
+    msg = c * _PROBE_HIDDEN * 2
+
+    def leg(x):
+        return jax.lax.ppermute(x, axis_name,
+                                [(i, (i + 1) % p) for i in range(p)])
+
+    spec = P(axis_name, None, None)
+    fn = jax.jit(shard_map(leg, mesh=mesh, in_specs=spec, out_specs=spec))
+    x = jax.random.normal(jax.random.PRNGKey(0),
+                          (p, c, _PROBE_HIDDEN)).astype(jnp.bfloat16)
+    seconds = _timed(fn, (x,), warmup=warmup, iters=iters)
+    return MeasuredRow(kind="stage", name="ppermute", wire_format="bf16",
+                       msg_bytes=int(msg), chunks=1,
+                       seconds=float(seconds))
+
+
 def run_probe_suite(mesh, topo: Topology, axis_name: str = "model", *,
                     ladder: Sequence[int] = (1 << 16, 1 << 19, 1 << 22),
                     wire_formats: Sequence[str] = ("bf16", "int8"),
@@ -185,6 +210,14 @@ def run_probe_suite(mesh, topo: Topology, axis_name: str = "model", *,
                                  row.seconds * 1e3)
     elif verbose:
         log.info("probe: axis %r has size 1 — no a2a rows", axis_name)
+    if topo.axis_size("pipe") > 1 and "pipe" in mesh.axis_names:
+        for nbytes in ladder:
+            row = probe_stage_transfer(mesh, nbytes, warmup=warmup,
+                                       iters=iters)
+            rows.append(row)
+            if verbose:
+                log.info("probe stage/ppermute %dB -> %.3fms",
+                         row.msg_bytes, row.seconds * 1e3)
     if include_kernels:
         rows += probe_kernels(warmup=warmup, iters=iters)
     return rows

@@ -1,10 +1,8 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the 1 real CPU
 device (the 512-device override belongs to launch/dryrun.py only)."""
-import numpy as np
 import pytest
 
 import jax
-from jax.sharding import Mesh
 
 try:
     import hypothesis  # noqa: F401
@@ -17,8 +15,8 @@ except ImportError:                   # gated dep: container may not ship it
 def mesh():
     """1x1 (data, model) mesh over the single CPU device: exercises every
     mesh-aware code path (shard_map, collectives degenerate to identity)."""
-    devs = np.array(jax.devices()[:1]).reshape(1, 1)
-    return Mesh(devs, ("data", "model"))
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(1, 1, 1)
 
 
 @pytest.fixture()

@@ -141,8 +141,9 @@ def test_a2a_parity_bitwise_values_and_grads():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from functools import partial
-        from jax.sharding import Mesh, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
         from repro.compat import shard_map
+        from repro.launch.mesh import make_host_mesh
         from repro.comm.collectives import all_to_all_bf16
         from repro.comm.hierarchical import hierarchical_all_to_all_bf16
         from repro.comm.pipeline import pipelined_all_to_all_bf16
@@ -168,8 +169,7 @@ def test_a2a_parity_bitwise_values_and_grads():
 
         for dtype in (jnp.bfloat16, jnp.float32):
             # 1D: all 8 devices on the model axis, two node factorings
-            m1 = Mesh(np.array(jax.devices()).reshape(1, 8),
-                      ("data", "model"))
+            m1 = make_host_mesh(1, 1, 8)
             check(m1, 1, 8, [
                 lambda x: all_to_all_bf16(x, "model", 0, 0),
                 lambda x: hierarchical_all_to_all_bf16(x, "model", 2),
@@ -178,8 +178,7 @@ def test_a2a_parity_bitwise_values_and_grads():
                 lambda x: pipelined_all_to_all_bf16(x, "model", 0, 0, 2),
             ], dtype)
             # factored 2x4 mesh: model axis of 4, node boundary at 2
-            m2 = Mesh(np.array(jax.devices()).reshape(2, 4),
-                      ("data", "model"))
+            m2 = make_host_mesh(2, 1, 4)
             check(m2, 2, 4, [
                 lambda x: all_to_all_bf16(x, "model", 0, 0),
                 lambda x: hierarchical_all_to_all_bf16(x, "model", 2),
@@ -199,13 +198,12 @@ def test_moe_exchange_parity_end_to_end():
     out = _run("""
         import dataclasses
         import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import Mesh
         from repro.compat import set_mesh
         from repro.configs.base import CommConfig, LSHConfig, MoEConfig
         from repro.core.lsh_moe import lsh_moe_apply, lsh_moe_init
+        from repro.launch.mesh import make_host_mesh
 
-        mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
-                    ("data", "model"))
+        mesh = make_host_mesh(2, 1, 4)
         base = MoEConfig(num_experts=8, top_k=2, expert_ffn_dim=32,
                          capacity_factor=4.0,
                          lsh=LSHConfig(enabled=True, num_hashes=4,
@@ -242,7 +240,7 @@ def test_moe_exchange_parity_end_to_end():
         assert p.algorithm == "flat", p
         # ... and the registered mesh hint flips it to hierarchical
         from repro.launch.mesh import make_host_mesh
-        m = make_host_mesh(2, 4, node_size=2)
+        m = make_host_mesh(2, 1, 4, node_size=2)
         p = plan_collectives(m, CommConfig(), msg_bytes=1 << 24,
                              chunk_extent=64)
         assert p.algorithm == "hierarchical" and p.intra == 2, p

@@ -29,10 +29,10 @@ def test_moe_ep_path_multidevice_matches_dense():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.compat import set_mesh
-        from jax.sharding import Mesh
+        from repro.launch.mesh import make_host_mesh
         from repro.configs.base import LSHConfig, MoEConfig
         from repro.core.lsh_moe import lsh_moe_apply, lsh_moe_init
-        mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
+        mesh = make_host_mesh(2, 1, 2)
         cfg = MoEConfig(num_experts=4, top_k=2, expert_ffn_dim=32,
                         capacity_factor=4.0,
                         lsh=LSHConfig(enabled=False))
@@ -57,9 +57,9 @@ def test_tp_project_multidevice_matches_matmul():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.compat import set_mesh
-        from jax.sharding import Mesh
+        from repro.launch.mesh import make_host_mesh
         from repro.runtime.tp import tp_in_project, tp_project
-        mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
+        mesh = make_host_mesh(2, 1, 2)
         k = jax.random.PRNGKey(0)
         x = jax.random.normal(k, (2, 8, 16), jnp.float32)
         w1 = jax.random.normal(jax.random.fold_in(k, 1), (16, 32)) * 0.1
@@ -86,7 +86,7 @@ def test_dp_only_step_multidevice_matches_single():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.compat import set_mesh
-        from jax.sharding import Mesh
+        from repro.launch.mesh import make_host_mesh
         from repro.configs.registry import get_smoke_config
         from repro.configs.base import OptimizerConfig
         from repro.runtime.step import init_train_state, make_train_step
@@ -95,13 +95,12 @@ def test_dp_only_step_multidevice_matches_single():
         opt = OptimizerConfig(lr=1e-3, warmup_steps=0, total_steps=10)
         ds = SyntheticLMDataset(cfg.vocab_size, 16, 8)
         batch = ds.batch_at(0)
-        mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
+        mesh = make_host_mesh(2, 1, 2)
         with set_mesh(mesh):
             st = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh)
             st2, m = jax.jit(make_train_step(cfg, opt, mesh))(st, batch)
             l_multi = float(m["loss"])
-        mesh1 = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
-                     ("data", "model"))
+        mesh1 = make_host_mesh(1, 1, 1)
         with set_mesh(mesh1):
             st = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh1)
             st2, m = jax.jit(make_train_step(cfg, opt, mesh1))(st, batch)

@@ -1,0 +1,322 @@
+"""1F1B pipeline schedule: timetable invariants (in-process), planner
+bubble-variant resolution, 3D fingerprints, and the numerics contract —
+the staged step is BIT-IDENTICAL (loss and gradients) to the monolithic
+scan accumulation on the same mesh.  Parity needs real multi-device
+meshes, so those tests run in subprocesses on 8 forced host devices
+(same pattern as tests/test_comm.py)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.comm import planner, topology
+from repro.configs.base import CommConfig
+from repro.runtime.pipeline_schedule import (Schedule, bubble_fraction,
+                                             build_1f1b)
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+_BENCH = os.path.join(os.path.dirname(__file__), "..", "benchmarks")
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=_SRC + os.pathsep + _BENCH)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ------------------------------------------------------------- schedule --
+
+_SHAPES = [(1, 1), (1, 4), (2, 2), (2, 4), (3, 5), (4, 4), (4, 8)]
+
+
+@pytest.mark.parametrize("S,M", _SHAPES)
+def test_build_1f1b_invariants(S, M):
+    sched = build_1f1b(S, M)
+    assert isinstance(sched, Schedule)
+    # canonical tick count: 2(M+S-1) with S>1 stages, 2M for one stage
+    assert sched.ticks == (2 * (M + S - 1) if S > 1 else 2 * M)
+    # every (stage, phase, microbatch) unit appears exactly once
+    for s in range(S):
+        units = [u for u in sched.grid[s] if u is not None]
+        assert sorted(units) == sorted(
+            [(ph, mb) for ph in "BF" for mb in range(M)])
+        # per-stage in-flight bound: F(s, mb) only while nf - nb < S - s
+        # implies B(s, mb) strictly after F(s, mb)
+        for mb in range(M):
+            assert sched.tick_of(s, "F", mb) < sched.tick_of(s, "B", mb)
+    # dataflow: F descends the stages, B climbs back up
+    for mb in range(M):
+        for s in range(1, S):
+            assert sched.tick_of(s, "F", mb) > sched.tick_of(s - 1, "F", mb)
+            assert sched.tick_of(s - 1, "B", mb) > sched.tick_of(s, "B", mb)
+    # closed-form bubble fraction matches the simulated grid
+    assert sched.bubble_fraction() == pytest.approx(bubble_fraction(S, M))
+
+
+@pytest.mark.parametrize("S,M", _SHAPES)
+def test_a2a_slot_lands_in_bubble(S, M):
+    """The bubble-overlap contract: microbatch k's exchange slot (the
+    tick before F(stage, k)) is a pipeline bubble or a DIFFERENT
+    microbatch's compute — never k's own unit, so the wire time always
+    has compute (or idleness) to hide behind.  Only the cold-start unit
+    F(0, 0) has no slot (-1)."""
+    sched = build_1f1b(S, M)
+    for s in range(S):
+        for mb in range(M):
+            slot = sched.a2a_slot(s, mb)
+            if (s, mb) == (0, 0):
+                assert slot == -1
+                continue
+            assert 0 <= slot < sched.ticks
+            unit = sched.grid[s][slot]
+            assert unit is None or unit[1] != mb, (s, mb, unit)
+
+
+def test_build_1f1b_rejects_degenerate():
+    with pytest.raises(ValueError):
+        build_1f1b(0, 4)
+    with pytest.raises(ValueError):
+        build_1f1b(2, 0)
+
+
+def test_stage_bounds_partition():
+    from repro.models.model import stage_bounds
+    assert stage_bounds(4, 2) == ((0, 2), (2, 4))
+    assert stage_bounds(4, 1) == ((0, 4),)
+    # remainder goes to the earlier stages; every stage non-empty
+    assert stage_bounds(5, 2) == ((0, 3), (3, 5))
+    assert stage_bounds(7, 3) == ((0, 3), (3, 5), (5, 7))
+    with pytest.raises(ValueError):
+        stage_bounds(2, 3)                # more stages than super-blocks
+    with pytest.raises(ValueError):
+        stage_bounds(4, 0)
+
+
+# ---------------------------------------------------------------- planner --
+
+def _topo3(data=1, pipe=4, model=8, node=4):
+    return topology.Topology(
+        axis_sizes=(("data", data), ("pipe", pipe), ("model", model)),
+        node_size=node)
+
+
+def test_planner_auto_picks_bubble_inside_pipeline():
+    with planner.pipeline_context(4, 8, 0.3):
+        p = planner.plan_collectives(None, CommConfig(), topology=_topo3(),
+                                     msg_bytes=1 << 24)
+    assert p.algorithm == planner.BUBBLE
+    assert p.base == planner.HIERARCHICAL        # big msg + factorable axis
+    assert p.transport == planner.HIERARCHICAL   # what hits the wire
+    assert "bubble" in p.reason and "base=hierarchical" in p.reason
+    # small message: the bubble variant rides the flat transport
+    with planner.pipeline_context(4, 8, 0.3):
+        p2 = planner.plan_collectives(None, CommConfig(), topology=_topo3(),
+                                      msg_bytes=1024)
+    assert p2.algorithm == planner.BUBBLE and p2.transport == planner.FLAT
+
+
+def test_planner_bubble_degrades_without_pipeline():
+    p = planner.plan_collectives(None, CommConfig(a2a_impl="bubble"),
+                                 topology=_topo3(), msg_bytes=1 << 24)
+    assert p.algorithm == planner.FLAT
+    assert "degraded" in p.reason and "1F1B" in p.reason
+
+
+def test_planner_single_stage_is_bit_identical():
+    """A 1-stage (or 1-microbatch) pipeline context must not perturb
+    planning at all: same plan object as no context — the no-HLO-diff
+    degrade guarantee."""
+    topo = _topo3(pipe=1)
+    base = planner.plan_collectives(None, CommConfig(), topology=topo,
+                                    msg_bytes=1 << 24)
+    with planner.pipeline_context(1, 1, 0.0):
+        p = planner.plan_collectives(None, CommConfig(), topology=topo,
+                                     msg_bytes=1 << 24)
+    assert p == base
+    with planner.pipeline_context(4, 1, 0.0):     # 1 microbatch: no overlap
+        p = planner.plan_collectives(None, CommConfig(), topology=topo,
+                                     msg_bytes=1 << 24)
+    assert p == base
+
+
+def test_plan_stage_transfers_records_pipe_plan():
+    p = planner.plan_stage_transfers(None, CommConfig(),
+                                     msg_bytes=1 << 20, topology=_topo3())
+    assert p.axis_name == "pipe" and p.algorithm == planner.FLAT
+    assert "stage hand-offs" in p.reason
+    assert planner.last_plan("pipe") is p
+    # degenerate pipe axis: recorded but explicitly degraded
+    p1 = planner.plan_stage_transfers(None, CommConfig(), msg_bytes=1 << 20,
+                                      topology=_topo3(pipe=1))
+    assert "degraded" in p1.reason
+
+
+def test_stage_transfer_cost_model():
+    t = _topo3(pipe=4, node=2)
+    costs = topology.stage_transfer_cost(t, 1 << 20)
+    assert len(costs) == 1 and costs[0].hop == "inter"   # 4 > node_size 2
+    small = topology.stage_transfer_cost(_topo3(pipe=2, node=2), 1 << 20)
+    assert small[0].hop == "intra"                       # fits in a node
+    assert topology.stage_transfer_cost(_topo3(pipe=1), 1 << 20) == ()
+
+
+# ------------------------------------------------------------ fingerprint --
+
+def test_fingerprint_carries_pipe_axis(tmp_path, monkeypatch):
+    """A 3D (data, pipe, model) mesh fingerprints differently from the 2D
+    mesh with the same chip count, and round-trips through the tuning
+    cache."""
+    from repro.tune import cache
+    from repro.tune.fingerprint import Fingerprint, fingerprint_for
+    from repro.tune.model import CalibratedCostModel
+    monkeypatch.setenv(cache.ENV_CACHE, str(tmp_path))
+    fp3 = fingerprint_for(None, _topo3(data=1, pipe=4, model=2, node=2),
+                          "model")
+    assert ("pipe", 4) in fp3.axis_sizes
+    assert Fingerprint.from_dict(fp3.to_dict()) == fp3
+    calib = CalibratedCostModel(key=fp3.key(), intra_bw=1e9)
+    cache.store(fp3, calib.to_payload())
+    got = CalibratedCostModel.from_payload(fp3.key(), cache.load(fp3))
+    assert got.intra_bw == 1e9
+    # same 8 chips, no pipe axis: different key, quiet cache miss
+    fp2 = fingerprint_for(
+        None, topology.Topology(axis_sizes=(("data", 4), ("model", 2)),
+                                node_size=2), "model")
+    assert fp2.key() != fp3.key()
+    assert "axis_sizes" in fp3.diff(fp2)
+    assert cache.load(fp2) is None
+
+
+# ----------------------------------------------------------- deprecation --
+
+def test_bfcoll_shim_warns_once():
+    out = _run("""
+        import warnings
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            import repro.runtime.bfcoll
+        msgs = [str(x.message) for x in w
+                if issubclass(x.category, DeprecationWarning)]
+        assert any("repro.comm.collectives" in m for m in msgs), msgs
+        from repro.runtime.bfcoll import all_to_all_bf16   # still re-exports
+        print("bfcoll deprecation OK")
+    """, devices=1)
+    assert "bfcoll deprecation OK" in out
+
+
+# ------------------------------------------- numerics parity (multi-device) --
+
+# NOTE on the loss comparison: XLA compiles the scan's loss computation
+# with different low bits depending on whether the gradients are live
+# outputs of the SAME program (verified by jitting make_accum_grad_fn
+# with full vs loss-only output sets — the two differ in the last ulp on
+# CPU).  Gradients are bitwise stable either way.  So the contract is
+# asserted as: gradients bitwise from the full programs, loss bitwise
+# from matched loss-only programs, and full-program losses equal to 1e-5.
+_PARITY_BODY = """
+    import jax, jax.numpy as jnp
+    from repro.compat import set_mesh
+    from repro.comm import planner as comm_planner
+    from repro.data.synthetic import SyntheticLMDataset
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import init_params
+    from repro.runtime.pipeline_schedule import make_pipeline_grad_fn
+    from repro.runtime.step import make_accum_grad_fn
+    from common import tiny_moe_config
+
+    mesh = make_host_mesh({data}, {pipe}, {model}, node_size=2)
+    cfg = tiny_moe_config(lsh={lsh}, wire_format="{fmt}").replace(
+        num_super_blocks=4, pipeline_microbatches={mb})
+    ds = SyntheticLMDataset(cfg.vocab_size, 32, 8)
+    batch = ds.batch_at(0)
+    with set_mesh(mesh):
+        params = init_params(jax.random.PRNGKey(0), cfg, mesh)
+        base = make_accum_grad_fn(cfg, mesh, microbatch=8 // {mb})
+        pipe = make_pipeline_grad_fn(cfg, mesh)
+        l_b, m_b, g_b = jax.jit(base)(params, batch)
+        l_p, m_p, g_p = jax.jit(pipe)(params, batch)
+        leaves_b = jax.tree_util.tree_leaves_with_path(g_b)
+        leaves_p = jax.tree_util.tree_leaves_with_path(g_p)
+        assert len(leaves_b) == len(leaves_p)
+        bad = [jax.tree_util.keystr(kb)
+               for (kb, vb), (kp, vp) in zip(leaves_b, leaves_p)
+               if not jnp.array_equal(vb, vp)]
+        assert not bad, "grad mismatch: " + ", ".join(bad)
+        lb = jax.jit(lambda p, b: base(p, b)[0])(params, batch)
+        lp = jax.jit(lambda p, b: pipe(p, b)[0])(params, batch)
+        assert jnp.array_equal(lb, lp), (lb, lp)
+        assert abs(float(l_b) - float(l_p)) < 1e-5, (l_b, l_p)
+        assert sorted(m_b) == sorted(m_p)
+        assert jnp.isfinite(m_p["ce"])
+        pm = comm_planner.last_plan("model")
+        assert pm is not None and pm.algorithm == "bubble", pm
+        pp = comm_planner.last_plan("pipe")
+        assert pp is not None and "stage hand-offs" in pp.reason, pp
+    print("parity OK", float(lp))
+"""
+
+
+def test_pipeline_parity_1d_pipe_bitwise():
+    """4-stage 1F1B over a (1, 4, 2) mesh: bit-identical loss and grads
+    vs the monolithic scan, LSH off (dense routing still exercises the
+    MoE dispatch + comm metrics plumbing)."""
+    out = _run(_PARITY_BODY.format(data=1, pipe=4, model=2, lsh=False,
+                                   fmt="bf16", mb=4))
+    assert "parity OK" in out
+
+
+def test_pipeline_parity_2x2x2_lsh_int8_bitwise():
+    """Full 3D (data, pipe, model) mesh with LSH compression ON and the
+    int8 wire format: the staged schedule must keep bitwise parity even
+    when the bubble-planned a2a carries quantized centroids."""
+    out = _run(_PARITY_BODY.format(data=2, pipe=2, model=2, lsh=True,
+                                   fmt="int8", mb=4))
+    assert "parity OK" in out
+
+
+def test_probe_suite_covers_stage_leg():
+    """run_probe_suite on a live (1, 2, 4) mesh times the stage-transfer
+    ppermute leg alongside the a2a rows."""
+    out = _run("""
+        from repro.comm.topology import Topology
+        from repro.launch.mesh import make_host_mesh
+        from repro.tune.probe import run_probe_suite
+
+        mesh = make_host_mesh(1, 2, 4)
+        topo = Topology(axis_sizes=(("data", 1), ("pipe", 2), ("model", 4)),
+                        node_size=2)
+        rows = run_probe_suite(mesh, topo, "model", ladder=(4096, 16384),
+                               wire_formats=("bf16",),
+                               chunk_candidates=(2,), iters=2,
+                               include_kernels=False)
+        stage = [r for r in rows if r.kind == "stage"]
+        assert len(stage) == 2, rows
+        assert all(r.name == "ppermute" and r.seconds > 0 and
+                   r.msg_bytes > 0 for r in stage), stage
+        assert any(r.kind == "a2a" for r in rows)
+        print("stage probe OK")
+    """)
+    assert "stage probe OK" in out
+
+
+def test_train_launcher_pipeline_smoke():
+    """End-to-end: the production launcher on --mesh-pipe 2 runs 1F1B
+    steps and surfaces the bubble-overlapped comm plan."""
+    env = dict(os.environ, PYTHONPATH=_SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "qwen3-moe-30b-a3b", "--smoke", "--steps", "2", "--batch", "8",
+         "--seq", "32", "--mesh-pipe", "2", "--mesh-model", "2",
+         "--pipeline-microbatches", "4", "--log-every", "1"],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "[comm] plan: bubble" in out.stdout, out.stdout[-2000:]
+    assert "done: 2 steps" in out.stdout

@@ -139,12 +139,9 @@ def test_autotune_refuses_measurement_free_entry(tune_cache, caplog):
     """A 1-device wire axis measures no transports: no cache entry is
     stored and ensure_calibrated reports uncalibrated, so 'calibrated'
     always means something was actually timed."""
-    import numpy as np
-    import jax
-    from jax.sharding import Mesh
+    from repro.launch.mesh import make_host_mesh
     from repro.tune.autotune import autotune
-    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
-                ("data", "model"))
+    mesh = make_host_mesh(1, 1, 1)
     with caplog.at_level(logging.WARNING, logger="repro.tune.autotune"):
         choices = autotune(mesh, ladder=(4096,), wire_formats=("bf16",),
                            iters=1, warmup=0)
@@ -336,12 +333,11 @@ def test_decode_gspmd_on_session_mesh_reports_unplanned():
     import numpy as np
     import jax
     import jax.numpy as jnp
-    from jax.sharding import Mesh
     from repro.configs.base import MoEConfig
     from repro.core.lsh_moe import lsh_moe_apply, lsh_moe_init
+    from repro.launch.mesh import make_host_mesh
 
-    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
-                ("data", "model"))
+    mesh = make_host_mesh(1, 1, 1)
     cfg = MoEConfig(num_experts=4, top_k=2, expert_ffn_dim=16)
     params = lsh_moe_init(jax.random.PRNGKey(0), 8, cfg, mesh,
                           mlp_act="gelu", dtype=jnp.float32)
@@ -386,7 +382,7 @@ def test_probe_cli_cache_restart_and_invalidation(tmp_path):
         from repro.tune.fingerprint import fingerprint_for
         from repro.comm.topology import build_topology
 
-        mesh = make_host_mesh(1, 8, node_size=2)
+        mesh = make_host_mesh(1, 1, 8, node_size=2)
         p = planner.plan_collectives(mesh, CommConfig(tuning="cache"),
                                      msg_bytes=1 << 14, chunk_extent=64)
         assert p.calibrated, p
@@ -396,7 +392,7 @@ def test_probe_cli_cache_restart_and_invalidation(tmp_path):
         # node-size registry slot (keyed by Mesh equality)
         fp1 = fingerprint_for(mesh, build_topology(mesh, axis_name="model"),
                               "model")
-        mesh4 = make_host_mesh(1, 8, node_size=4)
+        mesh4 = make_host_mesh(1, 1, 8, node_size=4)
         topo4 = build_topology(mesh4, axis_name="model")
         fp2 = fingerprint_for(mesh4, topo4, "model")
         shutil.copyfile(cache.entry_path(fp1), cache.entry_path(fp2))
@@ -415,12 +411,11 @@ def test_probe_suite_smoke_multi_device():
     timed rows with positive seconds and honest wire-bytes accounting."""
     out = _run("""
         import numpy as np, jax
-        from jax.sharding import Mesh
         from repro.comm.topology import Topology
+        from repro.launch.mesh import make_host_mesh
         from repro.tune.probe import run_probe_suite
 
-        mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
-                    ("data", "model"))
+        mesh = make_host_mesh(2, 1, 4)
         topo = Topology(axis_sizes=(("data", 2), ("model", 4)),
                         node_size=2)
         rows = run_probe_suite(mesh, topo, "model",
@@ -454,14 +449,13 @@ def test_decode_dense_dispatch_planned_parity():
     out = _run("""
         import dataclasses
         import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import Mesh
         from repro.compat import set_mesh
         from repro.configs.base import CommConfig, MoEConfig
         from repro.core import moe as moe_lib
         from repro.core.lsh_moe import lsh_moe_apply, lsh_moe_init
+        from repro.launch.mesh import make_host_mesh
 
-        mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
-                    ("data", "model"))
+        mesh = make_host_mesh(2, 1, 4)
         base = MoEConfig(num_experts=8, top_k=2, expert_ffn_dim=32)
         params = lsh_moe_init(jax.random.PRNGKey(0), 16, base, mesh,
                               mlp_act="swiglu", dtype=jnp.float32)

@@ -260,16 +260,16 @@ def test_combine_bit_identical_across_formats_and_transports():
     out = _run("""
         import dataclasses
         import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import Mesh, PartitionSpec as P
+        from jax.sharding import PartitionSpec as P
         from repro.compat import shard_map
+        from repro.launch.mesh import make_host_mesh
         from repro.comm import planner as comm_planner
         from repro.comm import wire as comm_wire
         from repro.configs.base import CommConfig
         from repro.core import clustering
         from repro.core.hashing import make_rotations
 
-        mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
-                    ("data", "model"))
+        mesh = make_host_mesh(2, 1, 4)
         R, e_pad, C, H, S = 4, 8, 24, 32, 8
         n_dev = 8
         key = jax.random.PRNGKey(0)
@@ -327,13 +327,12 @@ def test_full_layer_wire_format_parity():
     out = _run("""
         import dataclasses
         import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import Mesh
         from repro.compat import set_mesh
         from repro.configs.base import CommConfig, LSHConfig, MoEConfig
         from repro.core.lsh_moe import lsh_moe_apply, lsh_moe_init
+        from repro.launch.mesh import make_host_mesh
 
-        mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
-                    ("data", "model"))
+        mesh = make_host_mesh(2, 1, 4)
 
         def cfg_for(fmt, comm):
             return MoEConfig(num_experts=8, top_k=2, expert_ffn_dim=32,
@@ -393,14 +392,13 @@ def test_hlo_a2a_operand_bytes_shrink():
     <= 0.55x of bf16 — i.e. the dispatch/combine a2a shrinks >= 1.8x."""
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import Mesh
         from repro.compat import set_mesh
         from repro.configs.base import CommConfig, LSHConfig, MoEConfig
         from repro.core.lsh_moe import lsh_moe_apply, lsh_moe_init
         from repro.launch import hlo_structural
+        from repro.launch.mesh import make_host_mesh
 
-        mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
-                    ("data", "model"))
+        mesh = make_host_mesh(2, 1, 4)
 
         def cfg_for(fmt):
             return MoEConfig(num_experts=8, top_k=2, expert_ffn_dim=64,
