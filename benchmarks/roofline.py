@@ -1,12 +1,61 @@
 """Eq. 6 / §Roofline: three-term roofline per (arch × shape) from the
-dry-run artifacts (artifacts/dryrun.json).  Emits one row per cell."""
+dry-run artifacts (artifacts/dryrun.json), plus the fused-wire HBM-bytes
+accounting: per fused codec op (kernels/fused_wire.py), total HBM traffic
+of the fused kernel vs the unfused composition it replaces — the
+composition spills the f32 wire tensor to HBM and reads it back, the
+fused kernel keeps it in VMEM, so fused is strictly lower by
+2 x 4 bytes/element of the intermediate.  Emits one row per cell/op."""
 from __future__ import annotations
 
 import json
 import os
 
+# Paper-scale dispatch-buffer shape for the per-op accounting: E experts
+# x C capacity slots x H hidden, F = E*C routed entries, G*S the LSH
+# centroid grid.  Absolute bytes scale linearly; the fused/unfused RATIO
+# is shape-independent in H >> 1.
+_E, _C, _H = 64, 512, 1024
+_G, _S = 64, 256
+_IDX = 4                                  # int32 routing ids / positions
+
+
+def _fused_wire_rows(out_rows, payload_bytes=1, fmt="int8"):
+    """HBM read+write bytes per op.  ``unfused`` adds one f32 write + one
+    f32 read of the intermediate wire tensor the fused kernel never
+    materializes (scales sidecar f32 in both)."""
+    f32 = 4
+    ops = {
+        # fused: read src [F,H] + ids/pos, write q [E,C,H] + scales [E,C]
+        "dispatch_scatter_quantize": (
+            _E * _C * (_H * f32 + 2 * _IDX)           # src + routing
+            + _E * _C * (_H * payload_bytes + f32),   # q + scales out
+            _E * _C * _H,                             # f32 intermediate
+        ),
+        # fused: read q + scales + ids/pos, write out [F,H] f32
+        "dequantize_combine_gather": (
+            _E * _C * (_H * payload_bytes + f32 + 2 * _IDX)
+            + _E * _C * (_H * f32 + f32),             # out + weights
+            _E * _C * _H,
+        ),
+        # fused: read q + scales [G,S] + slots + residual, write [G,C,H]
+        "dequantize_residual_apply": (
+            _G * (_S * (_H * payload_bytes + f32) + _C * _IDX)
+            + 2 * _G * _C * _H * f32,                 # residual + out
+            _G * _S * _H,
+        ),
+    }
+    for op, (fused, interm_elems) in ops.items():
+        unfused = fused + 2 * interm_elems * f32      # spill + reload
+        assert fused < unfused
+        out_rows.append(
+            (f"roofline/fused_wire/{op}/{fmt}", float(fused),
+             f"hbm_bytes_fused={fused},hbm_bytes_unfused={unfused},"
+             f"saved_frac={1.0 - fused / unfused:.3f}"))
+    return out_rows
+
 
 def run(out_rows):
+    _fused_wire_rows(out_rows)
     art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                        "dryrun.json")
     if not os.path.exists(art):

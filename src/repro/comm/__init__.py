@@ -3,7 +3,7 @@
 Every collective in the repo lives here:
 
   collectives   bf16-pinned differentiable leaf primitives (all_gather /
-                reduce_scatter / all_to_all) — moved from runtime/bfcoll
+                reduce_scatter / all_to_all)
   topology      factored-mesh model + per-hop wire cost model
   hierarchical  2-hop intra-node/inter-node all-to-all (custom_vjp)
   pipeline      chunked a2a double-buffered against expert compute

@@ -1,5 +1,4 @@
-"""Differentiable bf16-pinned collective primitives (moved from
-runtime/bfcoll.py — that module remains as a deprecation shim).
+"""Differentiable bf16-pinned collective primitives.
 
 ``bitcast_convert_type`` has a zero gradient, so naively bitcasting around
 a collective silently kills the backward pass.  Each primitive here is a

@@ -177,6 +177,17 @@ class CommPlan:
                                              concat, self.chunks)
         return all_to_all_bf16(x, self.axis_name, split, concat)
 
+    def leaf_transports(self):
+        """(fwd, bwd) per-leaf movers for comm/wire.py's FUSED codec
+        transfers: the planned transport as pure data movement (flat or
+        2-hop; a bubble plan contributes its base).  The pipelined
+        transport is excluded by design — its overlap slices the float
+        tensor before encode, so fused callers must gate on
+        ``transport != PIPELINED`` and fall back to ``moe_exchange``."""
+        if self.transport == HIERARCHICAL:
+            return wire_lib.hierarchical_leaves(self.axis_name, self.intra)
+        return wire_lib.flat_leaves(self.axis_name)
+
     def all_gather(self, x, axis_name: str, axis: int, g: int):
         """bf16-pinned tiled all-gather (FSDP weight gathers); transpose is
         a reduce-scatter, ZeRO-2 gradient sharding for free."""

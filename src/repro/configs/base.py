@@ -90,6 +90,12 @@ class MoEConfig:
     # with op one of kernels.dispatch.OPS — e.g. force just the scatter back
     # to "reference" while bisecting a kernel regression.
     kernel_backend_overrides: Tuple[Tuple[str, str], ...] = ()
+    # Pallas grid tile overrides: (("tile_t", 256), ("tile_s", 16), ...)
+    # — tile_t tiles the token/capacity axis, tile_s the quantize slot
+    # axis.  Resolution: this > $REPRO_KERNEL_TILE > defaults (128 / 8);
+    # positive multiples of 8.  A PERFORMANCE knob only — results are
+    # bit-identical across tile choices (kernels/dispatch.resolve_tiles).
+    kernel_tiles: Tuple[Tuple[str, int], ...] = ()
     # Collective transport planning for the dispatch/combine all-to-all and
     # the FSDP weight gathers (comm/planner.py; docs/comm.md).
     comm: CommConfig = field(default_factory=CommConfig)

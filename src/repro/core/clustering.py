@@ -63,6 +63,11 @@ class Compressed(NamedTuple):
     tokens: Optional[jax.Array] = None    # [G, C, H] originals (when
     #                           error compensation is on — decompress adds
     #                           the expert delta onto these directly)
+    payload: Optional[jax.Array] = None   # [G, S, H] int8|fp8 — the
+    #                           centroids' wire encoding, kept so the
+    #                           fused dispatch leg (comm/wire.py
+    #                           precoded_transfer) ships it directly
+    #                           instead of re-quantizing in transit
 
 
 def wire_bytes(num_groups: int, num_slots: int, hidden: int,
@@ -91,17 +96,21 @@ def assign_slots(tokens: jax.Array, rotations: jax.Array, num_slots: int,
 
 def _to_wire(centroids: jax.Array, wire_format: Optional[str], wire_dtype,
              backend: dispatch.BackendSpec):
-    """f32 centroids -> (dequantized wire values f32, scales or None).
+    """f32 centroids -> (dequantized wire values f32, scales or None,
+    payload or None).
 
     The returned values are exactly what the far side of the a2a will
-    reconstruct: comm/wire.py re-encodes them in transit, and power-of-two
-    scales make that re-encode dequantize bit-identically
+    reconstruct: comm/wire.py either ships the payload as-is (the fused
+    precoded transfer) or re-encodes the dequantized values in transit,
+    and power-of-two scales make that re-encode dequantize bit-identically
     (kernels/wire_quant.py)."""
     if wire_format is None:
-        return centroids, None
+        return centroids, None, None
     if validate_wire_format(wire_format) == BF16_FORMAT:
-        return centroids.astype(wire_dtype).astype(jnp.float32), None
-    return dispatch.wire_roundtrip(centroids, wire_format, backend=backend)
+        return centroids.astype(wire_dtype).astype(jnp.float32), None, None
+    dq, payload, scales = dispatch.wire_encode_roundtrip(
+        centroids, wire_format, backend=backend)
+    return dq, scales, payload
 
 
 def compress(tokens: jax.Array, valid: jax.Array, rotations: jax.Array,
@@ -128,7 +137,8 @@ def compress(tokens: jax.Array, valid: jax.Array, rotations: jax.Array,
     # invalid tokens drop out on every backend.
     cent_f32, counts = dispatch.segment_centroid(
         slots, tokens, num_slots, backend=backend)
-    cent_f32, scales = _to_wire(cent_f32, wire_format, wire_dtype, backend)
+    cent_f32, scales, payload = _to_wire(cent_f32, wire_format, wire_dtype,
+                                         backend)
     centroids = cent_f32.astype(tokens.dtype)
     if error_compensation:
         gathered = dispatch.residual_apply(
@@ -141,7 +151,7 @@ def compress(tokens: jax.Array, valid: jax.Array, rotations: jax.Array,
         kept_tokens = None
     slots = jnp.minimum(slots, num_slots - 1)             # clamp overflow bin
     return Compressed(centroids, residuals.astype(tokens.dtype), slots,
-                      counts, scales, kept_tokens)
+                      counts, scales, kept_tokens, payload)
 
 
 def decompress(expert_out: jax.Array, comp: Compressed,
@@ -165,6 +175,22 @@ def decompress(expert_out: jax.Array, comp: Compressed,
                                       comp.tokens.astype(jnp.float32),
                                       backend=backend)
     return out.astype(expert_out.dtype)
+
+
+def fused_decompress_operands(comp: Compressed):
+    """(slots, base, residual) for comm/wire.py's fused decode+decompress
+    transfer (``fused_decode_residual_transfer``) — ``decompress``'s two
+    branches split into the fused kernel's operands:
+
+      base None (no error compensation):  Y = dq[slot] + residuals
+      base = centroids (compensation on): Y = tokens + (dq - centroids)[slot]
+
+    where dq is the dequantized received expert output the fused kernel
+    reconstructs in VMEM."""
+    if comp.tokens is None:
+        return comp.slots, None, comp.residuals.astype(jnp.float32)
+    return (comp.slots, comp.centroids.astype(jnp.float32),
+            comp.tokens.astype(jnp.float32))
 
 
 def compression_stats(comp: Compressed, valid: jax.Array,

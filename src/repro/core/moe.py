@@ -82,7 +82,10 @@ def _resolve_moe_backend(cfg: MoEConfig, kernel_backend, *,
     top (kernels/dispatch.py resolution order).  When LSH is off, a
     TPU-targeted config degrades ``pallas_tpu`` to ``reference`` instead
     of raising, so the use_lsh=False baseline (and decode) still traces
-    on CPU hosts; name/op validation applies either way."""
+    on CPU hosts; name/op validation applies either way.  Also installs
+    the config's Pallas tile overrides (cfg.kernel_tiles) for every
+    registry call this trace makes."""
+    dispatch.set_tiles(cfg.kernel_tiles)
     return dispatch.resolve_backends(
         kernel_backend or cfg.kernel_backend, cfg.kernel_backend_overrides,
         off_tpu_fallback=None if lsh_active else dispatch.REFERENCE)
@@ -135,10 +138,21 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
     plan = routing.build_dispatch_plan(gate.expert_ids, gate.weights,
                                        e_pad, capacity,
                                        backend=kernel_backend)
-    disp = routing.dispatch_tokens(plan, xf,
-                                   backend=kernel_backend).astype(xf.dtype)
+
+    # Fused codec path (comm/wire.py, kernels/fused_wire.py): quantized
+    # wire + a transport whose leaves move whole — the codec runs INSIDE
+    # the scatter/gather kernels and the f32 wire tensor never reaches
+    # HBM.  The pipelined transport keeps the per-chunk coded path (its
+    # overlap slices the float tensor before encode); $REPRO_FUSED_WIRE=0
+    # forces the composed path (bit-identical by contract — the parity
+    # suite flips it).
+    fused = (codec is not None and codec.quantized
+             and cplan.transport != comm_planner.PIPELINED
+             and wire_lib.fused_wire_enabled())
 
     if use_lsh:
+        disp = routing.dispatch_tokens(plan, xf,
+                                       backend=kernel_backend).astype(xf.dtype)
         # Residuals are computed against the DEQUANTIZED wire centroids,
         # so the codec's in-transit encode (comm/wire.py) is exactly
         # loss-transparent at the combine step.
@@ -149,18 +163,27 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
                                    wire_format=cfg.lsh.wire_format,
                                    wire_dtype=wire_dtype)
         wire, c_wire = comp.centroids, lsh_slots
+    elif codec is not None:
+        # Quantized non-LSH baseline (wire_format int8/fp8 with LSH off):
+        # the raw dispatch buffer crosses the wire coded.  It stays f32 —
+        # the unfused leg encodes the same buffer the fused kernel
+        # quantizes, keeping the two paths bit-identical; fused skips
+        # building it entirely (the scatter happens inside the transfer).
+        comp, c_wire = None, capacity
+        wire = None if fused else routing.dispatch_tokens(
+            plan, xf, backend=kernel_backend)
     else:
+        disp = routing.dispatch_tokens(plan, xf,
+                                       backend=kernel_backend).astype(xf.dtype)
         comp, wire, c_wire = None, disp, capacity
 
     # ---- wire exchange: dispatch a2a -> expert MLP -> combine a2a, with
     # the transport (flat | hierarchical | pipelined) picked by the plan
     # and the on-wire representation (bf16 | int8+scales | fp8+scales) by
     # the codec.  The compressed tensor is the only thing that crosses
-    # the wire; with a codec the cast/quantize happens in transit.
+    # the wire; with a codec the cast/quantize happens in transit (or
+    # inside the fused kernels).
     data_r = axis_size(mesh, "data")
-    if codec is None:
-        wire = wire.astype(wire_dtype)
-    send = wire.reshape(model_r, e_local, c_wire, H)
     # expert weights: FSDP all-gather over `data` (H axis) — hoisted out of
     # the (possibly chunked) exchange so they are gathered exactly once
     wg = None if w_gate is None else cplan.all_gather(w_gate, "data", 1,
@@ -177,16 +200,50 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
         out = out.reshape(el, r_, ck, h_).transpose(1, 0, 2, 3)
         return out if codec is not None else out.astype(wire_dtype)
 
-    ret = cplan.moe_exchange(send, expert_chunk, codec=codec)
-    expert_out = ret.reshape(e_pad, c_wire, H).astype(jnp.float32)
-
-    if use_lsh:
-        out_tok = clustering.decompress(expert_out, comp,
-                                        backend=kernel_backend)  # [E_pad,C,H]
+    if fused:
+        fwd_leaf, bwd_leaf = cplan.leaf_transports()
+        if use_lsh:
+            # Dispatch leg: ship the payload compress() already encoded
+            # (po2 idempotence == re-encoding the dequantized centroids);
+            # combine leg: decode fuses with decompress on the received
+            # quantized buffer.
+            send = wire.reshape(model_r, e_local, c_wire, H)
+            q_send = comp.payload.reshape(model_r, e_local, c_wire, H)
+            s_send = comp.scales.reshape(model_r, e_local, c_wire)
+            recv = wire_lib.precoded_transfer(send, q_send, s_send, codec,
+                                              fwd_leaf, bwd_leaf)
+            eo_wire = expert_chunk(recv)
+            slots, base, residual = clustering.fused_decompress_operands(
+                comp)
+            out_tok = wire_lib.fused_decode_residual_transfer(
+                eo_wire, slots, base, residual, codec, fwd_leaf, bwd_leaf)
+            y = routing.combine_tokens(plan, out_tok,
+                                       backend=kernel_backend)
+        else:
+            # Both legs fused into the routing kernels: scatter+quantize
+            # out, dequantize+gather back.
+            src = jnp.repeat(xf, cfg.top_k, axis=0)
+            recv = wire_lib.fused_dispatch_transfer(
+                plan.flat_ids, plan.positions, src, codec, fwd_leaf,
+                bwd_leaf, model_r, e_pad, capacity)
+            eo_wire = expert_chunk(recv)
+            w_flat = plan.weights.reshape(T * cfg.top_k).astype(jnp.float32)
+            yF = wire_lib.fused_combine_transfer(
+                eo_wire, plan.flat_ids, plan.positions, w_flat, codec,
+                fwd_leaf, bwd_leaf, model_r)
+            y = yF.reshape(T, cfg.top_k, H).sum(axis=1)
     else:
-        out_tok = expert_out
-
-    y = routing.combine_tokens(plan, out_tok, backend=kernel_backend)
+        if codec is None:
+            wire = wire.astype(wire_dtype)
+        send = wire.reshape(model_r, e_local, c_wire, H)
+        ret = cplan.moe_exchange(send, expert_chunk, codec=codec)
+        expert_out = ret.reshape(e_pad, c_wire, H).astype(jnp.float32)
+        if use_lsh:
+            out_tok = clustering.decompress(expert_out, comp,
+                                            backend=kernel_backend)
+        else:
+            out_tok = expert_out
+        y = routing.combine_tokens(plan, out_tok, backend=kernel_backend)
 
     all_axes = tuple(mesh.axis_names)
     aux = jax.lax.pmean(gate.aux_loss, all_axes)
@@ -228,13 +285,17 @@ def moe_expert_parallel(x: jax.Array, params: Dict, cfg: MoEConfig,
     c_wire = num_lsh_slots(capacity, cfg.lsh.compression_rate,
                            multiple=chunk_mult) if use_lsh else capacity
     # On-wire representation: the codec validates cfg.lsh.wire_format and
-    # carries the kernel-backend mapping for the quant/dequant ops; the
-    # use_lsh=False baseline ships the raw dispatch buffer codec-free
-    # (byte-identical to the pre-wire-format path).
-    wire_fmt = cfg.lsh.wire_format if use_lsh else None
+    # carries the kernel-backend mapping for the quant/dequant ops.  With
+    # LSH off, a quantized wire_format (int8/fp8) still builds a codec —
+    # the raw dispatch buffer crosses the wire coded (opt-in baseline);
+    # the default "bf16" keeps the baseline codec-free (byte-identical to
+    # the pre-wire-format path).
+    wire_fmt = cfg.lsh.wire_format if (
+        use_lsh or cfg.lsh.wire_format in wire_lib.QUANT_FORMATS) else None
     codec = wire_lib.make_codec(wire_fmt, wire_dtype=wire_dtype,
                                 compute_dtype=x.dtype,
-                                backend=backend) if use_lsh else None
+                                backend=backend) if wire_fmt is not None \
+        else None
     # Transport resolution (flat | hierarchical | pipelined) happens HERE,
     # once per traced step — _local_moe only consumes the plan.  The
     # message size feeding transport auto-selection is the TRUE wire

@@ -41,6 +41,9 @@ import jax.numpy as jnp
 
 from repro.compat import default_backend
 from repro.kernels import ref
+from repro.kernels.fused_wire import (dequantize_combine_gather_pallas,
+                                      dequantize_residual_apply_pallas,
+                                      dispatch_scatter_quantize_pallas)
 from repro.kernels.lsh_hash import lsh_hash_pallas
 from repro.kernels.residual_apply import residual_apply_pallas
 from repro.kernels.scatter_gather import (combine_gather_pallas,
@@ -58,11 +61,72 @@ ENV_VAR = "REPRO_KERNEL_BACKEND"
 
 OPS = ("lsh_hash", "segment_centroid", "residual_apply",
        "positions_in_expert", "dispatch_scatter", "combine_gather",
-       "wire_quantize", "wire_dequantize")
+       "wire_quantize", "wire_dequantize",
+       # Fused codec ops (kernels/fused_wire.py): bit-identical to the
+       # composition of the routing op and the wire_quantize/dequantize
+       # halves, without the f32 wire tensor's HBM round-trip.
+       "dispatch_scatter_quantize", "dequantize_combine_gather",
+       "dequantize_residual_apply")
 
 # A backend selector: a single name, or a per-op mapping op -> name with a
 # "*" default (see resolve_backends / MoEConfig.kernel_backend_overrides).
 BackendSpec = Union[str, Mapping[str, str], None]
+
+
+# ----------------------------------------------------------- tile sizes --
+#
+# Every Pallas wrapper takes its grid tile sizes (tile_t for the token /
+# capacity axis, tile_s for the quantize slot axis) as static kwargs; the
+# registry resolves them per call so the fused and unfused ops can be
+# tile-tuned without code changes.  Resolution order: config
+# (MoEConfig.kernel_tiles, installed via ``set_tiles``) >
+# $REPRO_KERNEL_TILE > defaults.  Tile sizes are a PERFORMANCE knob only:
+# results are bit-identical across tile choices (accumulation order along
+# the grid is fixed by the revisit pattern, not the tile width).
+
+TILE_ENV = "REPRO_KERNEL_TILE"
+DEFAULT_TILES = {"tile_t": 128, "tile_s": 8}
+
+_ACTIVE_TILES: Dict[str, int] = {}
+
+
+def resolve_tiles(overrides: Iterable[Tuple[str, int]] = ()) -> Dict[str, int]:
+    """(explicit overrides > $REPRO_KERNEL_TILE > defaults) -> concrete
+    tile mapping.  Env format: ``tile_t=256,tile_s=16`` (a bare integer
+    means tile_t).  Tiles must be positive multiples of 8 (the f32
+    sublane quantum); unknown keys raise."""
+    out = dict(DEFAULT_TILES)
+    env = os.environ.get(TILE_ENV, "")
+    entries = []
+    for part in env.split(","):
+        part = part.strip()
+        if part:
+            k, _, v = part.partition("=")
+            entries.append(("tile_t", k) if not v else (k.strip(), v))
+    entries += list(dict(overrides).items())
+    for k, v in entries:
+        if k not in DEFAULT_TILES:
+            raise ValueError(f"unknown kernel tile {k!r}; "
+                             f"known: {sorted(DEFAULT_TILES)}")
+        out[k] = int(v)
+    for k, v in out.items():
+        if v <= 0 or v % 8:
+            raise ValueError(f"kernel tile {k}={v} must be a positive "
+                             "multiple of 8")
+    return out
+
+
+def set_tiles(overrides: Iterable[Tuple[str, int]] = ()) -> None:
+    """Install config-level tile overrides (MoEConfig.kernel_tiles) for
+    subsequent registry calls — trace-time state, like the backend env
+    var.  An empty ``overrides`` resets to env/default resolution."""
+    global _ACTIVE_TILES
+    _ACTIVE_TILES = resolve_tiles(overrides) if dict(overrides) else {}
+
+
+def current_tiles() -> Dict[str, int]:
+    """The tile mapping registry lambdas resolve at call (trace) time."""
+    return dict(_ACTIVE_TILES) if _ACTIVE_TILES else resolve_tiles()
 
 
 def _float0_like(x):
@@ -78,6 +142,7 @@ def _float0_like(x):
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def _segment_centroid_pl(slots, x, num_slots, interpret):
     return segment_centroid_pallas(slots, x, num_slots=num_slots,
+                                   tile_t=current_tiles()["tile_t"],
                                    interpret=interpret)
 
 
@@ -94,7 +159,9 @@ def _segment_centroid_bwd(num_slots, interpret, res, cts):
     G, C = slots.shape
     H = d_cent.shape[-1]
     zeros = jnp.zeros((G, C, H), jnp.float32)
-    dx = residual_apply_pallas(slots, scaled, zeros, interpret=interpret)
+    dx = residual_apply_pallas(slots, scaled, zeros,
+                               tile_t=current_tiles()["tile_t"],
+                               interpret=interpret)
     return _float0_like(slots), dx.astype(xproto.dtype)
 
 
@@ -104,6 +171,7 @@ _segment_centroid_pl.defvjp(_segment_centroid_fwd, _segment_centroid_bwd)
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def _residual_apply_pl(slots, expert_out, residual, num_slots, interpret):
     return residual_apply_pallas(slots, expert_out, residual,
+                                 tile_t=current_tiles()["tile_t"],
                                  interpret=interpret)
 
 
@@ -119,6 +187,7 @@ def _residual_apply_bwd(num_slots, interpret, res, ct):
     # out = gather(expert_out, slots) + residual: the gather's transpose is
     # a segment-sum over slots — the centroid kernel run on the cotangent.
     cent, counts = segment_centroid_pallas(slots, ct, num_slots=num_slots,
+                                           tile_t=current_tiles()["tile_t"],
                                            interpret=interpret)
     d_eout = cent * counts[..., None]     # undo the kernel's mean
     return (_float0_like(slots), d_eout.astype(eproto.dtype),
@@ -189,9 +258,11 @@ def _pallas_routing_impls(interpret: bool):
                 dispatch_scatter_pallas(ids, pos, src,
                                         num_experts=num_experts,
                                         capacity=capacity,
+                                        tile_t=current_tiles()["tile_t"],
                                         interpret=interpret),
             lambda ids, pos, buf, weights:
                 combine_gather_pallas(ids, pos, buf, weights,
+                                      tile_t=current_tiles()["tile_t"],
                                       interpret=interpret))
 
 
@@ -217,15 +288,34 @@ def _pallas_ops(interpret: bool) -> Dict[str, Callable]:
             slots, eout, resid, eout.shape[1], interpret),
         "positions_in_expert": lambda ids, num_experts:
             positions_in_expert_pallas(ids, num_experts=num_experts,
+                                       tile_t=current_tiles()["tile_t"],
                                        interpret=interpret),
         "dispatch_scatter": _ROUTING_VJP[
             PALLAS_INTERPRET if interpret else PALLAS_TPU][0],
         "combine_gather": _ROUTING_VJP[
             PALLAS_INTERPRET if interpret else PALLAS_TPU][1],
         "wire_quantize": lambda x, fmt: wire_quantize_pallas(
-            x, fmt=fmt, interpret=interpret),
+            x, fmt=fmt, tile_s=current_tiles()["tile_s"],
+            interpret=interpret),
         "wire_dequantize": lambda q, scales: wire_dequantize_pallas(
-            q, scales, interpret=interpret),
+            q, scales, tile_s=current_tiles()["tile_s"],
+            interpret=interpret),
+        "dispatch_scatter_quantize":
+            lambda ids, pos, src, num_experts, capacity, fmt:
+                dispatch_scatter_quantize_pallas(
+                    ids, pos, src, num_experts=num_experts,
+                    capacity=capacity, fmt=fmt,
+                    tile_t=current_tiles()["tile_t"], interpret=interpret),
+        "dequantize_combine_gather":
+            lambda ids, pos, q, scales, weights:
+                dequantize_combine_gather_pallas(
+                    ids, pos, q, scales, weights,
+                    tile_t=current_tiles()["tile_t"], interpret=interpret),
+        "dequantize_residual_apply":
+            lambda slots, q, scales, residual, base:
+                dequantize_residual_apply_pallas(
+                    slots, q, scales, residual, base,
+                    tile_t=current_tiles()["tile_t"], interpret=interpret),
     }
 
 
@@ -238,6 +328,9 @@ _REFERENCE_OPS: Dict[str, Callable] = {
     "combine_gather": _ROUTING_VJP[REFERENCE][1],
     "wire_quantize": ref.wire_quantize_ref,
     "wire_dequantize": ref.wire_dequantize_ref,
+    "dispatch_scatter_quantize": ref.dispatch_scatter_quantize_ref,
+    "dequantize_combine_gather": ref.dequantize_combine_gather_ref,
+    "dequantize_residual_apply": ref.dequantize_residual_apply_ref,
 }
 
 
@@ -415,7 +508,7 @@ def wire_dequantize(q, scales, *, backend: BackendSpec = AUTO):
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
 def _wire_roundtrip(x, fmt, backend_name):
     q, scales = _REGISTRY[backend_name]["wire_quantize"](x, fmt)
-    return _REGISTRY[backend_name]["wire_dequantize"](q, scales), scales
+    return _REGISTRY[backend_name]["wire_dequantize"](q, scales), q, scales
 
 
 def _wire_roundtrip_fwd(x, fmt, backend_name):
@@ -423,7 +516,7 @@ def _wire_roundtrip_fwd(x, fmt, backend_name):
 
 
 def _wire_roundtrip_bwd(fmt, backend_name, _, cts):
-    ct_x, _ct_scales = cts
+    ct_x = cts[0]                         # q / scales carry no gradient
     return (ct_x,)                        # straight-through: d/dx [dq∘q] := I
 
 
@@ -444,4 +537,66 @@ def wire_roundtrip(x, fmt: str, *, backend: BackendSpec = AUTO):
     scales) representation itself is reproduced; fp8 may re-derive
     (2q, scales/2) when the row max rounded down to exactly qmax/2, an
     equivalent encoding of the same values."""
+    dq, _q, scales = _wire_roundtrip(x, fmt,
+                                     op_backend(backend, "wire_quantize"))
+    return dq, scales
+
+
+def wire_encode_roundtrip(x, fmt: str, *, backend: BackendSpec = AUTO):
+    """``wire_roundtrip`` that also returns the encoded payload:
+    (dq [G, S, H] f32, q [G, S, H] int8|fp8, scales [G, S] f32) under the
+    same straight-through VJP (gradients flow to ``x`` through ``dq``
+    only; ``q``/``scales`` are non-differentiable outputs).  The payload
+    is what lets ``clustering.compress`` hand the already-encoded
+    centroids to comm/wire.py's precoded transfer, skipping the in-transit
+    re-quantize that po2 idempotence makes redundant."""
     return _wire_roundtrip(x, fmt, op_backend(backend, "wire_quantize"))
+
+
+# ------------------------------------------------------------ fused ops --
+#
+# Forward-only registry entry points for the fused codec kernels
+# (kernels/fused_wire.py).  The int8/fp8 payload output means these cannot
+# carry a float cotangent themselves; DIFFERENTIATION lives one level up,
+# in comm/wire.py's composite transfers, whose custom VJPs call the
+# UNFUSED registry ops (dispatch_scatter / combine_gather /
+# residual_apply) so fused-path gradients are bit-identical to the
+# composed path's on every backend.
+
+def dispatch_scatter_quantize(expert_ids, pos, src, num_experts: int,
+                              capacity: int, fmt: str, *,
+                              backend: BackendSpec = AUTO):
+    """Fused ``wire_quantize(dispatch_scatter(...))``: [F] ids, [F]
+    positions, [F, H] tokens -> (q [E, C, H] int8|fp8-e4m3,
+    scales [E, C] f32), bit-identical to the composition but without the
+    f32 dispatch buffer's HBM round-trip (the Pallas kernel keeps it in a
+    VMEM scratch accumulator).  Out-of-range entries contribute nothing
+    (overflow bin); empty rows encode as zero payload with scale 1.
+    Forward-only — see the section comment."""
+    return _REGISTRY[op_backend(backend, "dispatch_scatter_quantize")][
+        "dispatch_scatter_quantize"](expert_ids, pos, src, num_experts,
+                                     capacity, fmt)
+
+
+def dequantize_combine_gather(expert_ids, pos, q, scales, weights, *,
+                              backend: BackendSpec = AUTO):
+    """Fused ``combine_gather(ids, pos, wire_dequantize(q, scales), w)``:
+    [F] ids, [F] positions, (q [E, C, H], scales [E, C]), [F] weights ->
+    [F, H] f32 = weights[f] * (q * scale)[id_f, pos_f], dequantized in
+    VREGs right before the weighted reduce.  Out-of-range entries gather
+    zero (overflow bin).  Forward-only — see the section comment."""
+    return _REGISTRY[op_backend(backend, "dequantize_combine_gather")][
+        "dequantize_combine_gather"](expert_ids, pos, q, scales, weights)
+
+
+def dequantize_residual_apply(slots, q, scales, residual, base=None, *,
+                              backend: BackendSpec = AUTO):
+    """Fused ``residual_apply(slots, wire_dequantize(q, scales) - base,
+    residual)`` (base omitted when None): [G, C] slot ids,
+    (q [G, S, H], scales [G, S]), [G, C, H] residuals, optional
+    [G, S, H] base -> [G, C, H] f32.  This is WireCodec.decode fused with
+    the LSH decompress leg — the received expert outputs never exist as an
+    f32 tensor in HBM.  Out-of-range slot ids gather zero (overflow bin).
+    Forward-only — see the section comment."""
+    return _REGISTRY[op_backend(backend, "dequantize_residual_apply")][
+        "dequantize_residual_apply"](slots, q, scales, residual, base)

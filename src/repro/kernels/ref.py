@@ -92,3 +92,41 @@ def combine_gather_ref(expert_ids: jax.Array, pos: jax.Array,
                                        jnp.clip(pos, 0, C - 1)]
     return gathered * (weights.astype(jnp.float32) *
                        in_range.astype(jnp.float32))[:, None]
+
+
+# ---------------------------------------------------------- fused codec --
+#
+# The fused-op oracles are LITERAL compositions of the oracles above, so
+# the bit-identity-to-composition contract (kernels/fused_wire.py,
+# docs/kernels.md) holds on the reference backend by construction.
+
+def dispatch_scatter_quantize_ref(expert_ids: jax.Array, pos: jax.Array,
+                                  src: jax.Array, num_experts: int,
+                                  capacity: int, fmt: str):
+    """Fused scatter+quantize: (q [E, C, H] int8|fp8, scales [E, C] f32)
+    == wire_quantize_ref(dispatch_scatter_ref(...))."""
+    return wire_quantize_ref(
+        dispatch_scatter_ref(expert_ids, pos, src, num_experts, capacity),
+        fmt)
+
+
+def dequantize_combine_gather_ref(expert_ids: jax.Array, pos: jax.Array,
+                                  q: jax.Array, scales: jax.Array,
+                                  weights: jax.Array) -> jax.Array:
+    """Fused dequantize+gather: [F, H] f32 ==
+    combine_gather_ref(ids, pos, wire_dequantize_ref(q, scales), w)."""
+    return combine_gather_ref(expert_ids, pos,
+                              wire_dequantize_ref(q, scales), weights)
+
+
+def dequantize_residual_apply_ref(slots: jax.Array, q: jax.Array,
+                                  scales: jax.Array, residual: jax.Array,
+                                  base: jax.Array = None) -> jax.Array:
+    """Fused dequantize+(base subtract)+residual gather: [G, C, H] f32 ==
+    residual_apply_ref(slots, wire_dequantize_ref(q, scales) - base,
+    residual); ``base`` None skips the subtraction (the LSH decompress
+    without error compensation)."""
+    dq = wire_dequantize_ref(q, scales)
+    if base is not None:
+        dq = dq - base.astype(jnp.float32)
+    return residual_apply_ref(slots, dq, residual)

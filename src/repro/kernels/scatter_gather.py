@@ -30,8 +30,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _sel_mask(ids, pos, expert, capacity, transpose):
-    """[C, tile_t] (or transposed) mask: pos one-hot AND id match."""
+def sel_mask(ids, pos, expert, capacity, transpose):
+    """[C, tile_t] (or transposed) mask: pos one-hot AND id match.  Shared
+    with the fused codec kernels (kernels/fused_wire.py) — ONE mask
+    builder is part of what makes fused and composed paths bit-identical."""
     tile_t = ids.shape[0]
     if transpose:
         iota_c = jax.lax.broadcasted_iota(jnp.int32, (tile_t, capacity), 1)
@@ -42,6 +44,7 @@ def _sel_mask(ids, pos, expert, capacity, transpose):
             (ids == expert)[None, :]).astype(jnp.float32)
 
 
+
 def _scatter_kernel(ids_ref, pos_ref, src_ref, out_ref, *, capacity):
     e = pl.program_id(0)
     t = pl.program_id(1)
@@ -50,7 +53,7 @@ def _scatter_kernel(ids_ref, pos_ref, src_ref, out_ref, *, capacity):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    sel = _sel_mask(ids_ref[0], pos_ref[0], e, capacity, transpose=False)
+    sel = sel_mask(ids_ref[0], pos_ref[0], e, capacity, transpose=False)
     src = src_ref[...].astype(jnp.float32)                 # [tile_t, H]
     out_ref[0] += jnp.dot(sel, src, preferred_element_type=jnp.float32)
 
@@ -95,7 +98,7 @@ def _gather_kernel(ids_ref, pos_ref, w_ref, buf_ref, out_ref, *, capacity):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    sel = _sel_mask(ids_ref[0], pos_ref[0], e, capacity, transpose=True)
+    sel = sel_mask(ids_ref[0], pos_ref[0], e, capacity, transpose=True)
     w = w_ref[0].astype(jnp.float32)                       # [tile_t]
     buf = buf_ref[0].astype(jnp.float32)                   # [C, H]
     out_ref[...] += w[:, None] * jnp.dot(

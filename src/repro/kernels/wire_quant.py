@@ -98,8 +98,16 @@ def _encode(y: jax.Array, fmt: str) -> jax.Array:
     return jnp.clip(y, -448.0, 448.0).astype(_FP8_DTYPE)
 
 
-def _quant_kernel(x_ref, q_ref, scale_ref, *, fmt, qmax_val):
-    x = x_ref[0].astype(jnp.float32)                   # [tile_s, H]
+def _quant_kernel(x_ref, q_ref, scale_ref, *, fmt, qmax_val, num_rows,
+                  tile_s):
+    # Mask rows past the true slot count BEFORE the absmax pass: padded
+    # rows never enter the scale derivation (they come out as zero
+    # payload, scale 1, whatever the pad values were) instead of having
+    # scales computed for them.
+    s = pl.program_id(1)
+    row = s * tile_s + jax.lax.broadcasted_iota(jnp.int32, (tile_s,), 0)
+    valid = (row < num_rows).astype(jnp.float32)       # [tile_s]
+    x = x_ref[0].astype(jnp.float32) * valid[:, None]  # [tile_s, H]
     absmax = jnp.max(jnp.abs(x), axis=-1)              # [tile_s]
     scale = po2_scale(absmax, qmax_val)
     q_ref[0] = _encode(x / scale[:, None], fmt)
@@ -125,7 +133,8 @@ def wire_quantize_pallas(x: jax.Array, *, fmt: str, tile_s: int = 8,
         x = jnp.pad(x, ((0, 0), (0, pad_s), (0, 0)))
     Sp = S + pad_s
     q, scales = pl.pallas_call(
-        functools.partial(_quant_kernel, fmt=fmt, qmax_val=qmax(fmt)),
+        functools.partial(_quant_kernel, fmt=fmt, qmax_val=qmax(fmt),
+                          num_rows=S, tile_s=tile_s),
         grid=(G, Sp // tile_s),
         in_specs=[pl.BlockSpec((1, tile_s, H), lambda g, s: (g, s, 0))],
         out_specs=(

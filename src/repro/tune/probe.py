@@ -123,31 +123,79 @@ def probe_a2a(mesh, axis_name: str, transport: str, target_bytes: int, *,
 
 def probe_kernels(*, sizes: Sequence[Tuple[int, int, int]] = ((8, 256, 128),),
                   num_hashes: int = 4, num_slots: int = 64, warmup: int = 1,
-                  iters: int = 5) -> List[MeasuredRow]:
+                  iters: int = 5, wire_format: str = "int8"
+                  ) -> List[MeasuredRow]:
     """Time the LSH hash + segment-centroid hot path through the kernel
-    registry (backend resolution incl. $REPRO_KERNEL_BACKEND applies)."""
+    registry (backend resolution incl. $REPRO_KERNEL_BACKEND applies),
+    plus each fused-codec op (kernels/fused_wire.py) next to its
+    composed equivalent — the per-op fused-vs-unfused delta a tuning run
+    reports alongside the transport rows."""
     rows = []
     key = jax.random.PRNGKey(1)
+
+    def krow(name, fn, args, fmt="-", nbytes=0):
+        return MeasuredRow(
+            kind="kernel", name=name, wire_format=fmt,
+            msg_bytes=int(nbytes), chunks=1,
+            seconds=float(_timed(jax.jit(fn), args, warmup=warmup,
+                                 iters=iters)))
+
     for g, c, h in sizes:
         toks = jax.random.normal(key, (g, c, h), jnp.float32)
         rot = make_rotations(jax.random.fold_in(key, 1), num_hashes, h,
                              min(64, h), jnp.float32)
         hash_fn = jax.jit(lambda t: dispatch.lsh_hash(
             t.reshape(-1, t.shape[-1]), rot))          # op contract: [T, H]
-        rows.append(MeasuredRow(
-            kind="kernel", name="lsh_hash", wire_format="-",
-            msg_bytes=g * c * h * 4, chunks=1,
-            seconds=float(_timed(hash_fn, (toks,), warmup=warmup,
-                                 iters=iters))))
+        rows.append(krow("lsh_hash", hash_fn, (toks,),
+                         nbytes=g * c * h * 4))
         slots = (jnp.abs(hash_fn(toks))[:, 0] % jnp.int32(num_slots)
                  ).reshape(g, c)
-        cent_fn = jax.jit(lambda s, t: dispatch.segment_centroid(
-            s, t, num_slots))
-        rows.append(MeasuredRow(
-            kind="kernel", name="segment_centroid", wire_format="-",
-            msg_bytes=g * c * h * 4, chunks=1,
-            seconds=float(_timed(cent_fn, (slots, toks), warmup=warmup,
-                                 iters=iters))))
+        rows.append(krow(
+            "segment_centroid",
+            lambda s, t: dispatch.segment_centroid(s, t, num_slots),
+            (slots, toks), nbytes=g * c * h * 4))
+
+        # ---- fused codec ops vs their composed equivalents.  Shapes
+        # mirror the dispatch buffer: g experts x c capacity, with a
+        # round-robin routing that fills every row.
+        fmt = wire_format
+        wbytes = wire_bytes(g, c, h, fmt)
+        flat = jax.random.normal(jax.random.fold_in(key, 2),
+                                 (g * c, h), jnp.float32)
+        ids = (jnp.arange(g * c, dtype=jnp.int32) % g)
+        pos = (jnp.arange(g * c, dtype=jnp.int32) // g)
+        w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (g * c,)))
+        rows.append(krow(
+            "dispatch_scatter_quantize",
+            lambda i, p, s: dispatch.dispatch_scatter_quantize(
+                i, p, s, g, c, fmt), (ids, pos, flat), fmt, wbytes))
+        rows.append(krow(
+            "dispatch_scatter+quantize",
+            lambda i, p, s: dispatch.wire_quantize(
+                dispatch.dispatch_scatter(i, p, s, g, c), fmt),
+            (ids, pos, flat), fmt, wbytes))
+        q, sc = dispatch.wire_quantize(toks, fmt)
+        rows.append(krow(
+            "dequantize_combine_gather",
+            lambda i, p, qq, ss, ww: dispatch.dequantize_combine_gather(
+                i, p, qq, ss, ww), (ids, pos, q, sc, w), fmt, wbytes))
+        rows.append(krow(
+            "dequantize+combine_gather",
+            lambda i, p, qq, ss, ww: dispatch.combine_gather(
+                i, p, dispatch.wire_dequantize(qq, ss), ww),
+            (ids, pos, q, sc, w), fmt, wbytes))
+        resid = jax.random.normal(jax.random.fold_in(key, 4),
+                                  (g, c, h), jnp.float32)
+        sl = slots % jnp.int32(c)
+        rows.append(krow(
+            "dequantize_residual_apply",
+            lambda s, qq, ss, rr: dispatch.dequantize_residual_apply(
+                s, qq, ss, rr), (sl, q, sc, resid), fmt, wbytes))
+        rows.append(krow(
+            "dequantize+residual_apply",
+            lambda s, qq, ss, rr: dispatch.residual_apply(
+                s, dispatch.wire_dequantize(qq, ss), rr),
+            (sl, q, sc, resid), fmt, wbytes))
     return rows
 
 

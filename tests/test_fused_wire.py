@@ -1,0 +1,276 @@
+"""Fused wire-codec kernels (kernels/fused_wire.py + the fused transfers
+in comm/wire.py).
+
+The contract under test: each fused op — scatter+quantize,
+dequantize+gather, dequantize+residual-apply — is BIT-IDENTICAL to the
+unfused composition of registry ops it replaces, per backend and wire
+format, including all-zero tiles, empty experts (no routed tokens) and
+overflow-bin entries.  The composite transfers in comm/wire.py extend
+that to gradients: under identity leaves, values AND cotangents match the
+composed coded_transfer chains bitwise.
+
+Subprocess (8 forced host devices): flipping $REPRO_FUSED_WIRE on the
+full layer (real expert MLP, flat and hierarchical transports, LSH on and
+the coded non-LSH baseline) changes nothing — values and gradients are
+bit-identical either way.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import wire as wire_lib
+from repro.kernels import dispatch
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+BACKENDS = ("reference", "pallas_interpret")
+FORMATS = ("int8", "fp8")
+
+E, C, H, G, S = 4, 16, 24, 3, 8
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(7)
+
+
+def _f32(a):
+    return np.asarray(a).astype(np.float32)
+
+
+def _routing_case(rng):
+    """[F] routing with duplicates, overflow-bin entries (id == E) and an
+    empty expert (id 3 never routed); [F, H] tokens with a huge per-row
+    dynamic range and all-zero rows for everything routed to expert 0."""
+    F = 40
+    ids = jax.random.randint(rng, (F,), 0, 3).astype(jnp.int32)
+    ids = ids.at[5].set(E).at[17].set(E)              # dropped entries
+    pos = (jnp.arange(F, dtype=jnp.int32) * 5) % C
+    src = jax.random.normal(jax.random.fold_in(rng, 1), (F, H))
+    src = src * jnp.exp(3.0 * jax.random.normal(
+        jax.random.fold_in(rng, 2), (F, 1)))
+    src = jnp.where((ids == 0)[:, None], 0.0, src)    # all-zero tiles
+    return ids, pos, src
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_scatter_quantize_parity(rng, fmt, backend):
+    ids, pos, src = _routing_case(rng)
+    qf, sf = dispatch.dispatch_scatter_quantize(ids, pos, src, E, C, fmt,
+                                                backend=backend)
+    buf = dispatch.dispatch_scatter(ids, pos, src, E, C, backend=backend)
+    qc, sc = dispatch.wire_quantize(buf, fmt, backend=backend)
+    np.testing.assert_array_equal(_f32(qf), _f32(qc))
+    np.testing.assert_array_equal(np.asarray(sf), np.asarray(sc))
+    # empty expert (never routed) and all-zero expert 0: zero payload,
+    # scale 1 — the all-zero-row convention of kernels/wire_quant.py
+    for e in (0, 3):
+        assert (_f32(qf)[e] == 0).all() and (np.asarray(sf)[e] == 1.0).all()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_dequantize_combine_gather_parity(rng, fmt, backend):
+    ids, pos, _ = _routing_case(rng)
+    buf = jax.random.normal(jax.random.fold_in(rng, 3), (E, C, H)) * 20.0
+    q, s = dispatch.wire_quantize(buf, fmt, backend=backend)
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 4),
+                                  (ids.shape[0],)))
+    fused = dispatch.dequantize_combine_gather(ids, pos, q, s, w,
+                                               backend=backend)
+    composed = dispatch.combine_gather(
+        ids, pos, dispatch.wire_dequantize(q, s, backend=backend), w,
+        backend=backend)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(composed))
+    # overflow-bin entries gather zero
+    assert (np.asarray(fused)[np.asarray(ids) == E] == 0).all()
+
+
+@pytest.mark.parametrize("base_on", (False, True))
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_dequantize_residual_apply_parity(rng, fmt, backend, base_on):
+    cent = jax.random.normal(rng, (G, S, H)) * 10.0
+    cent = cent.at[1].set(0.0)                        # all-zero group
+    q, s = dispatch.wire_quantize(cent, fmt, backend=backend)
+    slots = jax.random.randint(jax.random.fold_in(rng, 1), (G, C),
+                               0, S).astype(jnp.int32)
+    slots = slots.at[0, 3].set(S)                     # overflow bin
+    resid = jax.random.normal(jax.random.fold_in(rng, 2), (G, C, H))
+    base = cent if base_on else None
+    fused = dispatch.dequantize_residual_apply(slots, q, s, resid,
+                                               base, backend=backend)
+    dq = dispatch.wire_dequantize(q, s, backend=backend)
+    composed = dispatch.residual_apply(
+        slots, dq - base if base_on else dq, resid, backend=backend)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(composed))
+    # overflow slot gathers zero: the row passes the residual through
+    np.testing.assert_array_equal(np.asarray(fused)[0, 3],
+                                  np.asarray(resid)[0, 3])
+
+
+def _vjp_pair(fn_a, fn_b, primals, cot):
+    ya, vjp_a = jax.vjp(fn_a, *primals)
+    yb, vjp_b = jax.vjp(fn_b, *primals)
+    np.testing.assert_array_equal(np.asarray(ya), np.asarray(yb))
+    for ga, gb in zip(vjp_a(cot), vjp_b(cot)):
+        np.testing.assert_array_equal(np.asarray(ga), np.asarray(gb))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_fused_dispatch_combine_transfer_grads(rng, fmt, backend):
+    """Non-LSH coded legs under identity leaves: fused transfer ==
+    coded_transfer around the unfused routing op, values AND cotangents
+    bitwise."""
+    ids, pos, src = _routing_case(rng)
+    codec = wire_lib.make_codec(fmt, compute_dtype="float32",
+                                backend=backend)
+    ident = lambda v: v
+
+    _vjp_pair(
+        lambda s: wire_lib.fused_dispatch_transfer(
+            ids, pos, s, codec, ident, ident, 1, E, C),
+        lambda s: wire_lib.coded_transfer(
+            dispatch.dispatch_scatter(ids, pos, s, E, C,
+                                      backend=backend).reshape(1, E, C, H),
+            codec, ident, ident),
+        (src,),
+        jax.random.normal(jax.random.fold_in(rng, 5), (1, E, C, H)))
+
+    eo = jax.random.normal(jax.random.fold_in(rng, 6), (1, E, C, H)) * 5.0
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 7),
+                                  (ids.shape[0],)))
+    _vjp_pair(
+        lambda e, ww: wire_lib.fused_combine_transfer(
+            e, ids, pos, ww, codec, ident, ident, 1),
+        lambda e, ww: dispatch.combine_gather(
+            ids, pos,
+            wire_lib.coded_transfer(e, codec, ident, ident)
+            .reshape(E, C, H).astype(jnp.float32), ww, backend=backend),
+        (eo, w),
+        jax.random.normal(jax.random.fold_in(rng, 8),
+                          (ids.shape[0], H)))
+
+
+@pytest.mark.parametrize("base_on", (False, True))
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_fused_lsh_transfer_grads(rng, fmt, backend, base_on):
+    """LSH legs under identity leaves: precoded dispatch ==
+    coded_transfer of the dequantized centroids (po2 idempotence), and
+    the fused decode+decompress == coded_transfer -> residual_apply —
+    values AND cotangents bitwise."""
+    codec = wire_lib.make_codec(fmt, compute_dtype="float32",
+                                backend=backend)
+    ident = lambda v: v
+    x = jax.random.normal(rng, (G, S, H)) * 10.0
+    dq, payload, scales = dispatch.wire_encode_roundtrip(x, fmt,
+                                                         backend=backend)
+    send = dq.reshape(1, G, S, H)
+    _vjp_pair(
+        lambda v: wire_lib.precoded_transfer(
+            v, payload.reshape(1, G, S, H), scales.reshape(1, G, S),
+            codec, ident, ident),
+        lambda v: wire_lib.coded_transfer(v, codec, ident, ident),
+        (send,),
+        jax.random.normal(jax.random.fold_in(rng, 1), (1, G, S, H)))
+
+    eo = jax.random.normal(jax.random.fold_in(rng, 2), (1, G, S, H)) * 5.0
+    slots = jax.random.randint(jax.random.fold_in(rng, 3), (G, C),
+                               0, S).astype(jnp.int32)
+    resid = jax.random.normal(jax.random.fold_in(rng, 4), (G, C, H))
+    cot = jax.random.normal(jax.random.fold_in(rng, 5), (G, C, H))
+
+    def composed(e, b, r):
+        dqe = wire_lib.coded_transfer(e, codec, ident, ident) \
+            .reshape(G, S, H).astype(jnp.float32)
+        return dispatch.residual_apply(slots, dqe - b if base_on else dqe,
+                                       r, backend=backend)
+
+    if base_on:
+        _vjp_pair(
+            lambda e, b, r: wire_lib.fused_decode_residual_transfer(
+                e, slots, b, r, codec, ident, ident),
+            composed, (eo, dq, resid), cot)
+    else:
+        _vjp_pair(
+            lambda e, r: wire_lib.fused_decode_residual_transfer(
+                e, slots, None, r, codec, ident, ident),
+            lambda e, r: composed(e, None, r), (eo, resid), cot)
+
+
+# ------------------------------------------------ full layer (subprocess) --
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=_SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_full_layer_fused_flag_is_invisible():
+    """$REPRO_FUSED_WIRE=0 (composed) vs 1 (fused) on the real layer:
+    values and gradients bit-identical, per transport, for LSH int8/fp8
+    and the coded non-LSH baseline."""
+    out = _run("""
+        import os
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import set_mesh
+        from repro.configs.base import CommConfig, LSHConfig, MoEConfig
+        from repro.core.lsh_moe import lsh_moe_apply, lsh_moe_init
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(2, 1, 4)
+
+        def cfg_for(fmt, comm, lsh_on):
+            return MoEConfig(num_experts=8, top_k=2, expert_ffn_dim=32,
+                             capacity_factor=4.0, comm=comm,
+                             lsh=LSHConfig(enabled=lsh_on, num_hashes=4,
+                                           rotation_dim=16,
+                                           compression_rate=0.5,
+                                           wire_format=fmt))
+
+        params = lsh_moe_init(jax.random.PRNGKey(0), 16,
+                              cfg_for("bf16", CommConfig(), True), mesh,
+                              mlp_act="swiglu", dtype=jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16))
+
+        def run(fmt, comm, fused, lsh_on):
+            os.environ["REPRO_FUSED_WIRE"] = "1" if fused else "0"
+            cfg = cfg_for(fmt, comm, lsh_on)
+
+            def loss(w_up, x):
+                p = dict(params, w_up=w_up)
+                return lsh_moe_apply(p, x, cfg, mesh, mlp_act="swiglu",
+                                     mode="train")[0].sum()
+
+            with set_mesh(mesh):
+                y, _ = jax.jit(lambda p, x: lsh_moe_apply(
+                    p, x, cfg, mesh, mlp_act="swiglu",
+                    mode="train"))(params, x)
+                g = jax.jit(jax.grad(loss))(params["w_up"], x)
+            return np.asarray(y), np.asarray(g)
+
+        flat = CommConfig(a2a_impl="flat")
+        hier = CommConfig(a2a_impl="hierarchical", node_size=2)
+        for fmt, comm, lsh_on in (("int8", flat, True),
+                                  ("fp8", hier, True),
+                                  ("int8", flat, False)):
+            y0, g0 = run(fmt, comm, False, lsh_on)
+            y1, g1 = run(fmt, comm, True, lsh_on)
+            assert (y0 == y1).all(), (fmt, lsh_on, "values")
+            assert (g0 == g1).all(), (fmt, lsh_on, "grads")
+        print("fused flag invisible OK")
+    """)
+    assert "fused flag invisible OK" in out

@@ -194,23 +194,6 @@ def test_fingerprint_carries_pipe_axis(tmp_path, monkeypatch):
     assert cache.load(fp2) is None
 
 
-# ----------------------------------------------------------- deprecation --
-
-def test_bfcoll_shim_warns_once():
-    out = _run("""
-        import warnings
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            import repro.runtime.bfcoll
-        msgs = [str(x.message) for x in w
-                if issubclass(x.category, DeprecationWarning)]
-        assert any("repro.comm.collectives" in m for m in msgs), msgs
-        from repro.runtime.bfcoll import all_to_all_bf16   # still re-exports
-        print("bfcoll deprecation OK")
-    """, devices=1)
-    assert "bfcoll deprecation OK" in out
-
-
 # ------------------------------------------- numerics parity (multi-device) --
 
 # NOTE on the loss comparison: XLA compiles the scan's loss computation
