@@ -7,6 +7,11 @@ Two estimates per model:
     artifacts/dryrun.json exists.
 Validates the paper's claim that the share is large (~30-70%) and roughly
 scale-invariant in w (Eq. 6's (w-1)/w saturates).
+
+A third, LIVE estimate appears when a training run wrote a metrics
+summary (``launch/train.py --metrics-dir``, or $REPRO_METRICS_JSON): the
+``comm_share`` the run's step timeline attributed from the planner's
+actual message sizes and measured wall time (docs/observability.md).
 """
 from __future__ import annotations
 
@@ -47,6 +52,17 @@ def run(out_rows):
                 out_rows.append(
                     (f"fig3/measured/{c['arch']}", share * 1e6,
                      f"a2a_share={share:.3f},dom={c['dominant']}"))
+    live = os.environ.get("REPRO_METRICS_JSON") or os.path.join(
+        os.path.dirname(__file__), "..", "artifacts", "obs",
+        "metrics.json")
+    if os.path.exists(live):
+        with open(live) as f:
+            summary = json.load(f)
+        share = float(summary.get("comm_share", 0.0))
+        out_rows.append(
+            ("fig3/live/comm_share", share * 1e6,
+             f"a2a_share={share:.3f},steps={int(summary.get('steps', 0))},"
+             f"mean_step_s={summary.get('mean_step_s', 0.0):.3f}"))
     return out_rows
 
 

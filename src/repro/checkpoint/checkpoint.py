@@ -32,6 +32,8 @@ except ImportError:                    # ... stdlib zlib otherwise
     zstandard = None
 import zlib
 
+from repro.obs import events as obs_events
+
 _ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
@@ -110,6 +112,7 @@ def save_checkpoint(directory: str, step: int, tree, *,
     os.rename(tmp, final)
     with open(os.path.join(final, "COMMIT"), "w") as f:
         f.write("ok")
+    obs_events.emit("checkpoint_save", step=step, path=final)
     return final
 
 
@@ -159,6 +162,7 @@ def load_checkpoint(directory: str, template, *, step: Optional[int] = None,
                     for path_, _ in
                     jax.tree_util.tree_flatten_with_path(template)[0]]
     tdef = jax.tree_util.tree_structure(template)
+    obs_events.emit("checkpoint_restore", step=step, path=path)
     return (jax.tree_util.tree_unflatten(
         tdef, [restored[k] for k in leaves_order]),
         step, manifest["extra"])

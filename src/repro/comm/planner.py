@@ -52,6 +52,9 @@ from repro.comm.hierarchical import (hierarchical_all_to_all_bf16,
 from repro.comm.pipeline import (pipelined_all_to_all_bf16,
                                  pipelined_moe_exchange)
 from repro.comm.topology import Topology, build_topology
+from repro.obs import events as obs_events
+from repro.obs import tracing as obs_tracing
+from repro.obs.tracing import phase_scope
 
 FLAT = "flat"
 HIERARCHICAL = "hierarchical"
@@ -226,8 +229,11 @@ class CommPlan:
         if self.transport == HIERARCHICAL:
             return hierarchical_moe_exchange(send, compute_fn,
                                              self.axis_name, self.intra)
-        recv = all_to_all_bf16(send, self.axis_name, 0, 0)
-        return all_to_all_bf16(compute_fn(recv), self.axis_name, 0, 0)
+        with phase_scope(obs_tracing.PH_DISPATCH):
+            recv = all_to_all_bf16(send, self.axis_name, 0, 0)
+        out = compute_fn(recv)
+        with phase_scope(obs_tracing.PH_COMBINE):
+            return all_to_all_bf16(out, self.axis_name, 0, 0)
 
     # -- diagnostics ------------------------------------------------------
 
@@ -419,8 +425,27 @@ def plan_collectives(mesh=None, comm=None, *, axis_name: str = "model",
                     reason=reason, topology=topo,
                     calibrated=calib is not None,
                     base=base if requested == BUBBLE else "")
+    _emit_plan_event(axis_name, plan, msg_bytes)
     _LAST_PLANS[axis_name] = plan
     return plan
+
+
+def _emit_plan_event(axis_name: str, plan: CommPlan, msg_bytes: int) -> None:
+    """Structured "comm_plan" event, deduplicated against the previous
+    plan on the axis — plan_collectives runs once per traced MoE layer
+    (and per pipeline stage/microbatch), so an identical re-plan is not
+    news, but an algorithm/degrade/calibration flip is."""
+    prev = _LAST_PLANS.get(axis_name)
+    ident = (plan.algorithm, plan.reason, plan.chunks, plan.calibrated,
+             plan.base)
+    if prev is not None and ident == (prev.algorithm, prev.reason,
+                                      prev.chunks, prev.calibrated,
+                                      prev.base):
+        return
+    obs_events.emit("comm_plan", axis=axis_name, algorithm=plan.algorithm,
+                    degraded=plan.degraded, calibrated=plan.calibrated,
+                    chunks=plan.chunks, base=plan.base,
+                    msg_bytes=int(msg_bytes), reason=plan.reason)
 
 
 def plan_stage_transfers(mesh=None, comm=None, *, msg_bytes: int = 0,
@@ -445,6 +470,7 @@ def plan_stage_transfers(mesh=None, comm=None, *, msg_bytes: int = 0,
         reason = "degraded: axis 'pipe' has size 1 — no stage hand-offs"
     plan = CommPlan(FLAT, "pipe", intra=intra, chunks=1, reason=reason,
                     topology=topo)
+    _emit_plan_event("pipe", plan, msg_bytes)
     _LAST_PLANS["pipe"] = plan
     return plan
 

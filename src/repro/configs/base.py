@@ -74,6 +74,34 @@ class CommConfig:
 
 
 @dataclass(frozen=True)
+class ObsConfig:
+    """Structured observability (src/repro/obs/; docs/observability.md).
+
+    Everything is gated on ``enabled``: with it False (the default) no
+    metric, scope, or extra collective is traced and the compiled HLO is
+    byte-identical to a build without the obs subsystem
+    (tests/test_obs.py pins this).  With it on, the loss and gradients
+    are bitwise unchanged — observability only ADDS outputs."""
+    enabled: bool = False
+    # In-graph MetricBag riding the stats plumbing (obs/metrics.py):
+    # wire/raw bytes, load imbalance, drop fraction, slot occupancy,
+    # planner flags — surfaced as obs_* step metrics.
+    metrics: bool = True
+    # jax.named_scope phase annotation of gate -> compress -> a2a ->
+    # expert MLP -> combine -> decompress -> stage transfer
+    # (obs/tracing.py; visible in HLO metadata and profiler traces).
+    phases: bool = True
+
+    @property
+    def in_graph_metrics(self) -> bool:
+        return self.enabled and self.metrics
+
+    @property
+    def phase_tracing(self) -> bool:
+        return self.enabled and self.phases
+
+
+@dataclass(frozen=True)
 class MoEConfig:
     num_experts: int = 0
     top_k: int = 2
@@ -99,6 +127,10 @@ class MoEConfig:
     # Collective transport planning for the dispatch/combine all-to-all and
     # the FSDP weight gathers (comm/planner.py; docs/comm.md).
     comm: CommConfig = field(default_factory=CommConfig)
+    # Structured observability: in-graph MetricBag + phase tracing
+    # (src/repro/obs/; docs/observability.md).  Off by default — the
+    # disabled path compiles byte-identical HLO.
+    obs: ObsConfig = field(default_factory=ObsConfig)
 
 
 @dataclass(frozen=True)

@@ -50,6 +50,9 @@ from repro.configs.base import MoEConfig
 from repro.core import clustering, routing
 from repro.core.gating import top_k_gating
 from repro.kernels import dispatch
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
+from repro.obs.tracing import phase_scope
 from repro.runtime.sharding import axis_size, dp_axes
 
 
@@ -126,18 +129,23 @@ def _expert_mlp(tok, w_gate, w_up, w_down, mlp_act: str):
 def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
                cfg: MoEConfig, mesh: Mesh, mlp_act: str, e_pad: int,
                capacity: int, use_lsh: bool, lsh_slots: int, wire_dtype,
-               codec, kernel_backend, cplan: comm_planner.CommPlan):
-    """Per-device body. x: [B_loc, S_loc, H]."""
+               codec, kernel_backend, cplan: comm_planner.CommPlan,
+               with_obs: bool = False):
+    """Per-device body. x: [B_loc, S_loc, H].  ``with_obs`` additionally
+    returns pmean'd slot-occupancy and drop-fraction scalars (the
+    in-graph MetricBag inputs — obs/metrics.py); off by default so the
+    disabled path keeps today's outputs and HLO byte-identical."""
     model_r = axis_size(mesh, "model")
     e_local = e_pad // model_r
     B_loc, S_loc, H = x.shape
     T = B_loc * S_loc
     xf = x.reshape(T, H)
 
-    gate = top_k_gating(xf, router_w, cfg.top_k, placement)
-    plan = routing.build_dispatch_plan(gate.expert_ids, gate.weights,
-                                       e_pad, capacity,
-                                       backend=kernel_backend)
+    with phase_scope(obs_tracing.PH_GATE):
+        gate = top_k_gating(xf, router_w, cfg.top_k, placement)
+        plan = routing.build_dispatch_plan(gate.expert_ids, gate.weights,
+                                           e_pad, capacity,
+                                           backend=kernel_backend)
 
     # Fused codec path (comm/wire.py, kernels/fused_wire.py): quantized
     # wire + a transport whose leaves move whole — the codec runs INSIDE
@@ -151,17 +159,18 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
              and wire_lib.fused_wire_enabled())
 
     if use_lsh:
-        disp = routing.dispatch_tokens(plan, xf,
-                                       backend=kernel_backend).astype(xf.dtype)
-        # Residuals are computed against the DEQUANTIZED wire centroids,
-        # so the codec's in-transit encode (comm/wire.py) is exactly
-        # loss-transparent at the combine step.
-        comp = clustering.compress(disp, plan.occupancy, rot, lsh_slots,
-                                   cfg.lsh.hash_type,
-                                   cfg.lsh.error_compensation,
-                                   backend=kernel_backend,
-                                   wire_format=cfg.lsh.wire_format,
-                                   wire_dtype=wire_dtype)
+        with phase_scope(obs_tracing.PH_COMPRESS):
+            disp = routing.dispatch_tokens(
+                plan, xf, backend=kernel_backend).astype(xf.dtype)
+            # Residuals are computed against the DEQUANTIZED wire
+            # centroids, so the codec's in-transit encode (comm/wire.py)
+            # is exactly loss-transparent at the combine step.
+            comp = clustering.compress(disp, plan.occupancy, rot, lsh_slots,
+                                       cfg.lsh.hash_type,
+                                       cfg.lsh.error_compensation,
+                                       backend=kernel_backend,
+                                       wire_format=cfg.lsh.wire_format,
+                                       wire_dtype=wire_dtype)
         wire, c_wire = comp.centroids, lsh_slots
     elif codec is not None:
         # Quantized non-LSH baseline (wire_format int8/fp8 with LSH off):
@@ -194,11 +203,12 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
     def expert_chunk(recv):
         """[R, e_local, ck, H] wire chunk -> same shape, through the local
         experts (per-token MLP — any slot sub-range is valid)."""
-        r_, el, ck, h_ = recv.shape
-        tok = recv.transpose(1, 0, 2, 3).reshape(el, r_ * ck, h_)
-        out = _expert_mlp(tok.astype(x.dtype), wg, wu, wd, mlp_act)
-        out = out.reshape(el, r_, ck, h_).transpose(1, 0, 2, 3)
-        return out if codec is not None else out.astype(wire_dtype)
+        with phase_scope(obs_tracing.PH_EXPERT):
+            r_, el, ck, h_ = recv.shape
+            tok = recv.transpose(1, 0, 2, 3).reshape(el, r_ * ck, h_)
+            out = _expert_mlp(tok.astype(x.dtype), wg, wu, wd, mlp_act)
+            out = out.reshape(el, r_, ck, h_).transpose(1, 0, 2, 3)
+            return out if codec is not None else out.astype(wire_dtype)
 
     if fused:
         fwd_leaf, bwd_leaf = cplan.leaf_transports()
@@ -210,27 +220,33 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
             send = wire.reshape(model_r, e_local, c_wire, H)
             q_send = comp.payload.reshape(model_r, e_local, c_wire, H)
             s_send = comp.scales.reshape(model_r, e_local, c_wire)
-            recv = wire_lib.precoded_transfer(send, q_send, s_send, codec,
-                                              fwd_leaf, bwd_leaf)
+            with phase_scope(obs_tracing.PH_DISPATCH):
+                recv = wire_lib.precoded_transfer(send, q_send, s_send,
+                                                  codec, fwd_leaf, bwd_leaf)
             eo_wire = expert_chunk(recv)
             slots, base, residual = clustering.fused_decompress_operands(
                 comp)
-            out_tok = wire_lib.fused_decode_residual_transfer(
-                eo_wire, slots, base, residual, codec, fwd_leaf, bwd_leaf)
-            y = routing.combine_tokens(plan, out_tok,
-                                       backend=kernel_backend)
+            with phase_scope(obs_tracing.PH_COMBINE):
+                out_tok = wire_lib.fused_decode_residual_transfer(
+                    eo_wire, slots, base, residual, codec, fwd_leaf,
+                    bwd_leaf)
+            with phase_scope(obs_tracing.PH_DECOMPRESS):
+                y = routing.combine_tokens(plan, out_tok,
+                                           backend=kernel_backend)
         else:
             # Both legs fused into the routing kernels: scatter+quantize
             # out, dequantize+gather back.
             src = jnp.repeat(xf, cfg.top_k, axis=0)
-            recv = wire_lib.fused_dispatch_transfer(
-                plan.flat_ids, plan.positions, src, codec, fwd_leaf,
-                bwd_leaf, model_r, e_pad, capacity)
+            with phase_scope(obs_tracing.PH_DISPATCH):
+                recv = wire_lib.fused_dispatch_transfer(
+                    plan.flat_ids, plan.positions, src, codec, fwd_leaf,
+                    bwd_leaf, model_r, e_pad, capacity)
             eo_wire = expert_chunk(recv)
             w_flat = plan.weights.reshape(T * cfg.top_k).astype(jnp.float32)
-            yF = wire_lib.fused_combine_transfer(
-                eo_wire, plan.flat_ids, plan.positions, w_flat, codec,
-                fwd_leaf, bwd_leaf, model_r)
+            with phase_scope(obs_tracing.PH_COMBINE):
+                yF = wire_lib.fused_combine_transfer(
+                    eo_wire, plan.flat_ids, plan.positions, w_flat, codec,
+                    fwd_leaf, bwd_leaf, model_r)
             y = yF.reshape(T, cfg.top_k, H).sum(axis=1)
     else:
         if codec is None:
@@ -238,18 +254,30 @@ def _local_moe(x, router_w, w_gate, w_up, w_down, rot, placement, *,
         send = wire.reshape(model_r, e_local, c_wire, H)
         ret = cplan.moe_exchange(send, expert_chunk, codec=codec)
         expert_out = ret.reshape(e_pad, c_wire, H).astype(jnp.float32)
-        if use_lsh:
-            out_tok = clustering.decompress(expert_out, comp,
-                                            backend=kernel_backend)
-        else:
-            out_tok = expert_out
-        y = routing.combine_tokens(plan, out_tok, backend=kernel_backend)
+        with phase_scope(obs_tracing.PH_DECOMPRESS):
+            if use_lsh:
+                out_tok = clustering.decompress(expert_out, comp,
+                                                backend=kernel_backend)
+            else:
+                out_tok = expert_out
+            y = routing.combine_tokens(plan, out_tok,
+                                       backend=kernel_backend)
 
     all_axes = tuple(mesh.axis_names)
     aux = jax.lax.pmean(gate.aux_loss, all_axes)
     z = jax.lax.pmean(gate.z_loss, all_axes)
     load = jax.lax.psum(plan.load(), all_axes)
-    return y.reshape(B_loc, S_loc, H).astype(x.dtype), aux, z, load
+    y = y.reshape(B_loc, S_loc, H).astype(x.dtype)
+    if not with_obs:
+        return y, aux, z, load
+    # In-graph metric inputs (ObsConfig.in_graph_metrics only): occupied
+    # fraction of the LSH slot axis and the capacity-overflow drop
+    # fraction, averaged over the mesh like the gate losses.
+    occ = jnp.mean((comp.counts > 0).astype(jnp.float32)) if use_lsh \
+        else jnp.zeros((), jnp.float32)
+    occ = jax.lax.pmean(occ, all_axes)
+    dropf = jax.lax.pmean(plan.drop_fraction(), all_axes)
+    return y, aux, z, load, occ, dropf
 
 
 def moe_expert_parallel(x: jax.Array, params: Dict, cfg: MoEConfig,
@@ -310,20 +338,52 @@ def moe_expert_parallel(x: jax.Array, params: Dict, cfg: MoEConfig,
     ew_spec = P("model", "data", None)
     rep = P(None)
 
+    obs_on = cfg.obs.in_graph_metrics
     fn = partial(_local_moe, cfg=cfg, mesh=mesh, mlp_act=mlp_act,
                  e_pad=e_pad, capacity=capacity, use_lsh=use_lsh,
                  lsh_slots=c_wire if use_lsh else 0, wire_dtype=wire_dtype,
-                 codec=codec, kernel_backend=backend, cplan=cplan)
-    y, aux, z, load = shard_map(
+                 codec=codec, kernel_backend=backend, cplan=cplan,
+                 with_obs=obs_on)
+    mapped = shard_map(
         fn, mesh=mesh,
         in_specs=(tok_spec, P(None, None),
                   ew_spec if "w_gate" in params else None,
                   ew_spec, ew_spec, P(None, None, None), rep),
-        out_specs=(tok_spec, P(), P(), P()),
-    )(x, params["router_w"], params.get("w_gate"), params["w_up"],
-      params["w_down"], params["lsh_rot"], params["placement"])
+        out_specs=(tok_spec, P(), P(), P(), P(), P()) if obs_on
+        else (tok_spec, P(), P(), P()),
+    )
+    with obs_tracing.activate(cfg.obs.phase_tracing):
+        out = mapped(x, params["router_w"], params.get("w_gate"),
+                     params["w_up"], params["w_down"], params["lsh_rot"],
+                     params["placement"])
+    if obs_on:
+        y, aux, z, load, occ, dropf = out
+        # Wire bytes per a2a leg (scales sidecar included) vs the raw
+        # uncompressed dispatch buffer — the live Eq. 5 compression rate.
+        wire_per_leg = clustering.wire_bytes(e_pad, c_wire, H, wire_fmt,
+                                             wire_dtype=wire_dtype)
+        raw_per_leg = e_pad * capacity * H * jnp.dtype(x.dtype).itemsize
+        ne = min(cfg.num_experts, e_pad)
+        real = load[:ne].astype(jnp.float32)
+        imb = jnp.max(real) / jnp.maximum(jnp.mean(real), 1e-9)
+        bag = obs_metrics.MetricBag.zeros()
+        bag = bag.inc("wire_bytes", 2.0 * wire_per_leg)
+        bag = bag.inc("raw_bytes", 2.0 * raw_per_leg)
+        bag = bag.set("load_imbalance", imb)
+        bag = bag.set("drop_fraction", dropf)
+        bag = bag.set("slot_occupancy", occ)
+        # Plan identity enters as static floats — no extra trace ops.
+        bag = bag.set("comm_algorithm", float(cplan.algorithm_id))
+        bag = bag.set("comm_degraded", float(int(cplan.degraded)))
+        bag = bag.set("comm_calibrated", float(int(cplan.calibrated)))
+        bag = bag.set("comm_wire_format",
+                      float(comm_planner.WIRE_FORMAT_IDS.get(wire_fmt, -1)))
+        comm_stat = bag
+    else:
+        y, aux, z, load = out
+        comm_stat = _comm_stats_vector(cplan, wire_fmt)
     return y, {"aux_loss": aux, "z_loss": z, "expert_load": load,
-               "comm": _comm_stats_vector(cplan, wire_fmt)}
+               "comm": comm_stat}
 
 
 # --------------------------------------------------------------------------

@@ -2,11 +2,27 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
       --requests 8 --gen 16
+
+Observability: per-request arrival -> completion latency (arrival = when
+the request joined the closed backlog at t0, so latency INCLUDES queueing
+behind earlier batches), p50/p99 latency and tokens/sec(/device) in the
+final ``serve_summary`` event; ``--metrics-dir DIR`` appends all events
+to ``DIR/events.jsonl`` (docs/observability.md).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
+
+
+def _percentile(sorted_vals, q: float) -> float:
+    """Nearest-rank percentile on an already-sorted list."""
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1,
+            max(0, int(round(q / 100.0 * (len(sorted_vals) - 1)))))
+    return sorted_vals[i]
 
 
 def main() -> int:
@@ -17,6 +33,8 @@ def main() -> int:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--batch-slots", type=int, default=4)
+    ap.add_argument("--metrics-dir", default="",
+                    help="also write structured events (events.jsonl) here")
     args = ap.parse_args()
 
     import jax
@@ -25,41 +43,71 @@ def main() -> int:
     from repro.configs.registry import get_config, get_smoke_config
     from repro.launch.mesh import make_host_mesh
     from repro.models import model as model_lib
+    from repro.obs import events as obs_events
+    from repro.obs import export as obs_export
+
+    log = obs_events.global_log()
+    log.add_sink(obs_events.ConsoleSink())
+    jsonl = None
+    if args.metrics_dir:
+        os.makedirs(args.metrics_dir, exist_ok=True)
+        jsonl = obs_events.JsonlSink(
+            os.path.join(args.metrics_dir, obs_export.EVENTS_NAME))
+        log.add_sink(jsonl)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_host_mesh(1, 1, 1)
     B = args.batch_slots
     max_len = args.prompt_len + args.gen
+    n_dev = max(1, len(jax.devices()))
 
-    with set_mesh(mesh):
-        params = model_lib.init_params(jax.random.PRNGKey(0), cfg, mesh)
-        decode = jax.jit(lambda p, s, t: model_lib.decode_step(p, cfg, mesh,
-                                                               s, t))
-        key = jax.random.PRNGKey(1)
-        done = 0
-        t0 = time.time()
-        tokens_out = 0
-        while done < args.requests:
-            n = min(B, args.requests - done)
-            key, k1 = jax.random.split(key)
-            prompts = jax.random.randint(k1, (B, args.prompt_len), 0,
-                                         cfg.vocab_size)
-            state = model_lib.init_decode_state(cfg, B, max_len, mesh)
-            # prefill via teacher-forced decode (exercises the cache path)
-            for i in range(args.prompt_len):
-                logits, state = decode(params, state, prompts[:, i:i + 1])
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            for _ in range(args.gen):
-                logits, state = decode(params, state, tok)
+    try:
+        with set_mesh(mesh):
+            params = model_lib.init_params(jax.random.PRNGKey(0), cfg, mesh)
+            decode = jax.jit(
+                lambda p, s, t: model_lib.decode_step(p, cfg, mesh, s, t))
+            key = jax.random.PRNGKey(1)
+            done = 0
+            t0 = time.time()          # every request "arrives" at t0
+            tokens_out = 0
+            latencies = []
+            while done < args.requests:
+                n = min(B, args.requests - done)
+                key, k1 = jax.random.split(key)
+                prompts = jax.random.randint(k1, (B, args.prompt_len), 0,
+                                             cfg.vocab_size)
+                state = model_lib.init_decode_state(cfg, B, max_len, mesh)
+                # prefill via teacher-forced decode (exercises the cache
+                # path)
+                for i in range(args.prompt_len):
+                    logits, state = decode(params, state,
+                                           prompts[:, i:i + 1])
                 tok = jnp.argmax(logits, -1).astype(jnp.int32)
-                tokens_out += n
-            done += n
-            print(f"[serve] completed {done}/{args.requests} requests",
-                  flush=True)
-        dt = time.time() - t0
-    print(f"[serve] {tokens_out} tokens in {dt:.1f}s "
-          f"({tokens_out / dt:.1f} tok/s)", flush=True)
-    return 0
+                for _ in range(args.gen):
+                    logits, state = decode(params, state, tok)
+                    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                    tokens_out += n
+                jax.block_until_ready(tok)
+                t_done = time.time()
+                for r in range(done, done + n):
+                    lat = t_done - t0
+                    latencies.append(lat)
+                    obs_events.emit("serve_request", request=r,
+                                    latency_s=lat, tokens=args.gen)
+                done += n
+            dt = max(1e-9, time.time() - t0)
+        latencies.sort()
+        obs_events.emit(
+            "serve_summary", requests=args.requests, tokens=tokens_out,
+            dt=dt, tokens_per_s=tokens_out / dt,
+            tokens_per_s_device=tokens_out / dt / n_dev,
+            latency_p50_s=_percentile(latencies, 50),
+            latency_p99_s=_percentile(latencies, 99))
+        return 0
+    finally:
+        if jsonl is not None:
+            log.remove_sink(jsonl)
+            jsonl.close()
 
 
 if __name__ == "__main__":

@@ -7,20 +7,34 @@ Features exercised end-to-end: checkpoint/restart (auto-resume from last
 committed step), async checkpointing, NaN-skip, step watchdog, straggler
 monitor, hot-expert rebalancing, preemption (SIGTERM -> checkpoint ->
 exit 42), --auto-restart supervisor loop.
+
+Observability (docs/observability.md): every line this launcher prints
+is a structured event rendered by ``obs.events.ConsoleSink``;
+``--metrics-dir DIR`` additionally turns on the in-graph metrics +
+phase tracing (``ObsConfig``), appends every event to
+``DIR/events.jsonl``, and writes ``DIR/trace.json`` (Chrome trace-event
+JSON, loadable in Perfetto) plus ``DIR/metrics.json`` (live comm-ratio
+summary) at exit.  ``--profile N`` captures a ``jax.profiler`` device
+trace of the first N steps into ``DIR/jax_trace``.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import subprocess
 import sys
-import time
 
 import numpy as np
 
 
 def supervise(argv) -> int:
     """--auto-restart: relaunch the trainer on watchdog/preemption exits."""
+    from repro.obs import events as obs_events
+    log = obs_events.global_log()
+    sink = obs_events.ConsoleSink() if not log.active else None
+    if sink is not None:
+        log.add_sink(sink)
     attempts = 0
     child_args = [a for a in argv if a != "--auto-restart"]
     while True:
@@ -31,8 +45,8 @@ def supervise(argv) -> int:
         attempts += 1
         if attempts > int(os.environ.get("MAX_RESTARTS", "3")):
             return proc.returncode
-        print(f"[supervisor] restart #{attempts} after exit "
-              f"{proc.returncode}", flush=True)
+        obs_events.emit("restart", attempt=attempts,
+                        exit_code=proc.returncode)
 
 
 def main() -> int:
@@ -48,6 +62,9 @@ def main() -> int:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--watchdog-s", type=float, default=600.0)
+    ap.add_argument("--straggler-factor", type=float, default=2.0,
+                    help="flag a step as a straggler when it exceeds this "
+                         "multiple of the EMA step time")
     ap.add_argument("--auto-restart", action="store_true")
     ap.add_argument("--mesh-data", type=int, default=1,
                     help="data-axis extent of the training mesh")
@@ -70,35 +87,59 @@ def main() -> int:
                          "multi-device --mesh-model to time transports); "
                          "also enables cache consultation for this run "
                          "unless $REPRO_TUNE is already set")
+    ap.add_argument("--metrics-dir", default="",
+                    help="write events.jsonl + trace.json (Perfetto) + "
+                         "metrics.json here and enable the in-graph "
+                         "metrics / phase tracing (docs/observability.md)")
+    ap.add_argument("--profile", type=int, default=0,
+                    help="capture a jax.profiler trace of the first N "
+                         "steps into <metrics-dir>/jax_trace")
     args = ap.parse_args()
     if args.auto_restart:
         return supervise(sys.argv[1:])
 
     import jax
-    import jax.numpy as jnp
     from repro.checkpoint.checkpoint import CheckpointManager, load_checkpoint
     from repro.compat import set_mesh
     from repro.configs.base import OptimizerConfig
     from repro.configs.registry import get_config, get_smoke_config
-    from repro.data.pipeline import PrefetchIterator
-    from repro.data.synthetic import SyntheticLMDataset
     from repro.launch.mesh import make_host_mesh
+    from repro.obs import events as obs_events
+    from repro.obs import export as obs_export
+    from repro.obs import timeline as timeline_lib
+    from repro.data.synthetic import SyntheticLMDataset
     from repro.runtime.fault import (ExpertRebalancer, PreemptionHandler,
                                      StepWatchdog, StragglerMonitor)
     from repro.runtime.step import (TrainState, init_train_state,
                                     make_train_step)
+
+    log = obs_events.global_log()
+    log.add_sink(obs_events.ConsoleSink())
+    mem = obs_events.MemorySink()
+    jsonl = None
+    if args.metrics_dir:
+        os.makedirs(args.metrics_dir, exist_ok=True)
+        jsonl = obs_events.JsonlSink(
+            os.path.join(args.metrics_dir, obs_export.EVENTS_NAME))
+        log.add_sink(jsonl)
+        log.add_sink(mem)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     opt = OptimizerConfig(lr=1e-3, warmup_steps=min(20, args.steps // 5),
                           total_steps=args.steps)
     if args.mesh_pipe > 1:
         cfg = cfg.replace(pipeline_microbatches=args.pipeline_microbatches)
+    if args.metrics_dir:
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, obs=dataclasses.replace(cfg.moe.obs, enabled=True)))
     n_mesh = args.mesh_data * args.mesh_pipe * args.mesh_model
     if len(jax.devices()) < n_mesh:
-        print(f"error: mesh {args.mesh_data}x{args.mesh_pipe}x"
-              f"{args.mesh_model} needs {n_mesh} devices, have "
-              f"{len(jax.devices())} (force host devices via XLA_FLAGS)",
-              flush=True)
+        obs_events.emit(
+            "error", where="train",
+            message=(f"mesh {args.mesh_data}x{args.mesh_pipe}x"
+                     f"{args.mesh_model} needs {n_mesh} devices, have "
+                     f"{len(jax.devices())} (force host devices via "
+                     f"XLA_FLAGS)"))
         return 2
     mesh = make_host_mesh(args.mesh_data, args.mesh_pipe, args.mesh_model,
                           node_size=args.node_size)
@@ -115,15 +156,15 @@ def main() -> int:
         calib = tune_runtime.ensure_calibrated(mesh, comm_cfg,
                                                probe=args.autotune)
         if calib is not None:
-            print(f"[tune] calibrated comm constants active "
-                  f"(fingerprint {calib.key})", flush=True)
+            obs_events.emit("tune_calibrated", fingerprint=calib.key)
 
     ds = SyntheticLMDataset(cfg.vocab_size, args.seq, args.batch,
                             num_shards=jax.process_count(),
                             shard=jax.process_index())
     preempt = PreemptionHandler()
     watchdog = StepWatchdog(args.watchdog_s)
-    straggler = StragglerMonitor()
+    straggler = StragglerMonitor(threshold=args.straggler_factor)
+    timeline = timeline_lib.StepTimeline()
     mgr = CheckpointManager(args.ckpt, keep=3) if args.ckpt else None
     rebalancer = None
     placement = None
@@ -134,60 +175,133 @@ def main() -> int:
         # proposed placement is applied (apply_placement_update)
         placement = np.arange(cfg.moe.num_experts, dtype=np.int32)
 
-    with set_mesh(mesh):
-        state = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh)
-        start = 0
-        if mgr and mgr.latest_step() is not None:
-            restored, start, _ = load_checkpoint(args.ckpt, state)
-            state = TrainState(*restored)
-            print(f"[train] resumed from step {start}", flush=True)
-        step_fn = jax.jit(make_train_step(cfg, opt, mesh, use_lsh=use_lsh,
-                                          microbatch=0))
-        for s in range(start, args.steps):
-            watchdog.arm()
-            t0 = time.time()
-            state, metrics = step_fn(state, ds.batch_at(s))
-            loss = float(metrics["loss"])  # blocks; completes the step
-            watchdog.disarm()
-            dt = time.time() - t0
-            if straggler.record(s, dt):
-                print(f"[straggler] step {s} took {dt:.2f}s "
-                      f"(ema {straggler.ema:.2f}s)", flush=True)
-            if rebalancer is not None:
-                rebalancer.record(np.asarray(metrics["expert_load"]),
-                                  placement)
-            if s == start and "comm_algorithm" in metrics:
-                p = comm_planner.last_plan()
-                if p is not None:
-                    print(f"[comm] plan: {p.algorithm} ({p.reason})",
-                          flush=True)
-            if s % args.log_every == 0:
-                comm = ""
-                if "comm_algorithm" in metrics:
-                    comm = " comm=" + comm_planner.describe_comm_metrics(
-                        int(metrics["comm_algorithm"]),
-                        int(metrics["comm_degraded"]),
-                        int(metrics["comm_calibrated"]),
-                        int(metrics["comm_wire_format"]))
-                print(f"step {s} loss {loss:.4f} ce {float(metrics['ce']):.4f}"
-                      f" lr {float(metrics['lr']):.2e} {dt:.2f}s "
-                      f"skips {int(metrics['grad_skips'])}{comm}", flush=True)
-            want_ckpt = mgr and (s + 1) % args.ckpt_every == 0
-            if preempt.requested.is_set():
-                if mgr:
+    n_mb = (cfg.pipeline_microbatches or args.mesh_pipe) \
+        if args.mesh_pipe > 1 else 1
+    stage_msg_bytes = 0
+    if args.mesh_pipe > 1:
+        stage_msg_bytes = (args.batch // max(1, n_mb)) * args.seq \
+            * cfg.d_model * jax.numpy.dtype(cfg.dtype).itemsize
+
+    def export_artifacts(final_metrics=None):
+        if not args.metrics_dir:
+            return
+        sched = None
+        if args.mesh_pipe > 1:
+            from repro.runtime.pipeline_schedule import build_1f1b
+            sched = build_1f1b(args.mesh_pipe, n_mb)
+        obs_export.write_chrome_trace(
+            os.path.join(args.metrics_dir, obs_export.TRACE_NAME),
+            timeline, mem.events, schedule=sched)
+        extra = {}
+        if final_metrics is not None:
+            extra = {k: float(v) for k, v in final_metrics.items()
+                     if np.ndim(v) == 0}
+        obs_export.write_metrics_json(
+            os.path.join(args.metrics_dir, obs_export.METRICS_NAME),
+            timeline, extra=extra)
+
+    profiling = False
+    if args.profile and args.metrics_dir:
+        try:
+            jax.profiler.start_trace(
+                os.path.join(args.metrics_dir, "jax_trace"))
+            profiling = True
+        except Exception as exc:         # profiler backend unavailable
+            obs_events.emit("error", where="profiler", message=str(exc))
+
+    def stop_profile():
+        nonlocal profiling
+        if profiling:
+            try:
+                jax.profiler.stop_trace()
+            except Exception as exc:
+                obs_events.emit("error", where="profiler", message=str(exc))
+            profiling = False
+
+    metrics = {}
+    loss = float("nan")
+    try:
+        with set_mesh(mesh):
+            state = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh)
+            start = 0
+            if mgr and mgr.latest_step() is not None:
+                restored, start, _ = load_checkpoint(args.ckpt, state)
+                state = TrainState(*restored)
+                obs_events.emit("resume", from_step=start)
+            step_fn = jax.jit(make_train_step(cfg, opt, mesh,
+                                              use_lsh=use_lsh,
+                                              microbatch=0))
+            for s in range(start, args.steps):
+                watchdog.arm()
+                timeline.start(s)
+                state, metrics = step_fn(state, ds.batch_at(s))
+                loss = float(metrics["loss"])  # blocks; completes the step
+                watchdog.disarm()
+                rec = timeline.stop(s)
+                dt = rec.duration
+                if s == start:
+                    # The first step traced the real comm plan — derive
+                    # the phase attribution weights from it (calibrated
+                    # topology costs + analytic FLOPs).
+                    try:
+                        timeline.set_phase_seconds(
+                            timeline_lib.model_phase_seconds(
+                                cfg, mesh, batch=args.batch, seq=args.seq,
+                                stage_msg_bytes=stage_msg_bytes))
+                    except Exception as exc:
+                        obs_events.emit("error", where="timeline",
+                                        message=str(exc))
+                if profiling and s - start + 1 >= args.profile:
+                    stop_profile()
+                if straggler.record(s, dt):
+                    obs_events.emit("straggler", step=s, dt=dt,
+                                    ema=straggler.ema,
+                                    factor=args.straggler_factor,
+                                    phases=rec.phase_seconds())
+                if rebalancer is not None:
+                    rebalancer.record(np.asarray(metrics["expert_load"]),
+                                      placement)
+                if s % args.log_every == 0:
+                    comm = ""
+                    if "comm_algorithm" in metrics:
+                        comm = comm_planner.describe_comm_metrics(
+                            int(metrics["comm_algorithm"]),
+                            int(metrics["comm_degraded"]),
+                            int(metrics["comm_calibrated"]),
+                            int(metrics["comm_wire_format"]))
+                    obs_events.emit(
+                        "step", step=s, loss=loss,
+                        ce=float(metrics["ce"]),
+                        lr=float(metrics["lr"]), dt=dt,
+                        skips=int(metrics["grad_skips"]), comm=comm,
+                        comm_share=timeline.comm_share())
+                want_ckpt = mgr and (s + 1) % args.ckpt_every == 0
+                if preempt.requested.is_set():
+                    if mgr:
+                        mgr.save_async(s + 1, state)
+                        mgr.wait()
+                    obs_events.emit("preempt", step=s)
+                    stop_profile()
+                    export_artifacts(metrics)
+                    return 42
+                if want_ckpt:
                     mgr.save_async(s + 1, state)
-                    mgr.wait()
-                print("[train] preempted; checkpointed", flush=True)
-                return 42
-            if want_ckpt:
-                mgr.save_async(s + 1, state)
-        if mgr:
-            mgr.save_async(args.steps, state)
-            mgr.wait()
-    watchdog.stop()
-    print(f"[train] done: {args.steps} steps, final loss {loss:.4f}",
-          flush=True)
-    return 0
+            if mgr:
+                mgr.save_async(args.steps, state)
+                mgr.wait()
+        watchdog.stop()
+        obs_events.emit("train_done", steps=args.steps, loss=loss,
+                        comm_share=timeline.comm_share(),
+                        mean_step_s=timeline.mean_step_seconds())
+        stop_profile()
+        export_artifacts(metrics)
+        return 0
+    finally:
+        stop_profile()
+        if jsonl is not None:
+            log.remove_sink(jsonl)
+            jsonl.close()
+        log.remove_sink(mem)
 
 
 if __name__ == "__main__":

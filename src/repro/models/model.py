@@ -24,6 +24,7 @@ from repro.models import ssm as ssm_lib
 from repro.models import xlstm as xlstm_lib
 from repro.models.layers import (embed, embedding_init, fanin_init, mlp_apply,
                                  mlp_init, rmsnorm, rmsnorm_init, unembed)
+from repro.obs import metrics as obs_metrics
 from repro.runtime.sharding import constrain
 
 # ---------------------------------------------------------------- helpers --
@@ -256,9 +257,10 @@ def _stack_forward(blocks, x, cfg: ModelConfig, mesh, *, layout, causal,
             if ld is not None:
                 load = load + ld
             if cm is not None:
-                # static per-trace (same plan for every MoE layer) —
-                # overwrite, don't accumulate
-                comm = cm
+                # legacy int32 vector: static per-trace (same plan for
+                # every MoE layer) — overwrite.  MetricBag (obs on):
+                # counters accumulate across layers, gauges overwrite.
+                comm = obs_metrics.merge_stat(comm, cm)
         return (x, aux, z, load, comm), None
 
     if do_remat:
@@ -271,9 +273,7 @@ def _stack_forward(blocks, x, cfg: ModelConfig, mesh, *, layout, causal,
         aux0 = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
                 jnp.zeros((e_pad,), jnp.float32) if n_moe else
                 jnp.zeros((1,), jnp.float32),
-                # comm sentinel: unplanned algorithm/format, flags clear
-                # (core/moe._comm_stats_vector layout)
-                jnp.array([-1, 0, 0, -1], jnp.int32))
+                initial_comm_stat(cfg, layout))
     (x, aux, z, load, comm), _ = jax.lax.scan(body, (x, *aux0),
                                               tuple(blocks))
     return x, {"aux_loss": aux, "z_loss": z, "expert_load": load,
@@ -313,6 +313,19 @@ def stats_carry(stats: Dict) -> Tuple:
     partitioned stack across stage boundaries (pipeline_schedule.py)."""
     return (stats["aux_loss"], stats["z_loss"], stats["expert_load"],
             stats["comm"])
+
+
+def initial_comm_stat(cfg: ModelConfig, layout):
+    """Zero element for the stats carry's comm slot: a zeroed
+    ``MetricBag`` when in-graph metrics are on and the layout has MoE
+    blocks, else the legacy packed int32 sentinel (unplanned
+    algorithm/format, flags clear — core/moe._comm_stats_vector layout).
+    Shared by the stack scan's init and the pipeline grid's stage-0
+    carry so both agree on one treedef."""
+    has_moe = any(f == MOE for _, f in layout)
+    if has_moe and cfg.moe.obs.in_graph_metrics:
+        return obs_metrics.MetricBag.zeros()
+    return jnp.array([-1, 0, 0, -1], jnp.int32)
 
 
 def head_logits(params, cfg: ModelConfig, mesh, x: jax.Array) -> jax.Array:
@@ -366,7 +379,20 @@ def loss_from_logits(cfg: ModelConfig, logits: jax.Array, stats: Dict,
     metrics = {"ce": ce, "z_loss": zl, "moe_aux": stats["aux_loss"],
                "expert_load": stats["expert_load"], "loss": total}
     comm = stats.get("comm")
-    if comm is not None and cfg.has_moe():
+    if obs_metrics.is_bag(comm):
+        # Structured in-graph metrics (ObsConfig): flatten the bag into
+        # obs_* scalars, derive the live Eq. 5 compression rate, and keep
+        # the legacy comm_* names aliased to the bag's gauges.
+        metrics.update(comm.as_metrics())
+        metrics["obs_compression_rate"] = (
+            comm.get("wire_bytes")
+            / jnp.maximum(comm.get("raw_bytes"), 1.0))
+        metrics.update(
+            comm_algorithm=comm.get("comm_algorithm"),
+            comm_degraded=comm.get("comm_degraded"),
+            comm_calibrated=comm.get("comm_calibrated"),
+            comm_wire_format=comm.get("comm_wire_format"))
+    elif comm is not None and cfg.has_moe():
         # Planned-transport observability (core/moe._comm_stats_vector):
         # which a2a ran this step, whether the planner degraded it,
         # whether calibrated constants ranked it, and the wire format —

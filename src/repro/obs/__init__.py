@@ -1,0 +1,24 @@
+"""Structured observability (docs/observability.md).
+
+Three layers, all off by default and byte-invisible to compiled HLO
+until ``configs.base.ObsConfig.enabled`` turns them on:
+
+  * ``obs.metrics``  — ``MetricBag``, the typed in-graph metrics pytree
+    that rides the stats plumbing (core/moe.py -> models/model.py ->
+    runtime/pipeline_schedule.py).
+  * ``obs.tracing``  — gated ``jax.named_scope`` phase annotation;
+    ``obs.timeline`` — host-side step timer with per-phase wall-time
+    attribution, the live comm-ratio estimate, and 1F1B grid
+    reconstruction.
+  * ``obs.events`` / ``obs.export`` — typed events with console/JSONL
+    sinks and a Chrome trace-event (Perfetto) exporter.
+
+Launch surface: ``--metrics-dir`` / ``--profile`` on launch/train.py and
+launch/serve.py.
+"""
+from repro.obs import events, metrics, tracing
+from repro.obs.events import EventLog, emit, global_log
+from repro.obs.metrics import MOE_SCHEMA, MetricBag
+
+__all__ = ["events", "metrics", "tracing", "EventLog", "emit",
+           "global_log", "MOE_SCHEMA", "MetricBag"]

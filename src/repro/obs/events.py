@@ -1,0 +1,248 @@
+"""Structured event log: typed events, pluggable sinks, console rendering.
+
+Everything the launchers used to ``print()`` — comm-plan resolutions,
+planner degrades, straggler detections, checkpoint saves/restores, tune
+probe rows, serve request completions — becomes a typed ``Event``
+emitted through the process-local ``EventLog``.  Sinks subscribe to the
+log: ``ConsoleSink`` keeps the human-readable one-liners on stdout
+(rendering per kind, so the console output of a run looks like it always
+did), ``JsonlSink`` appends one JSON object per event to
+``<metrics-dir>/events.jsonl``, ``MemorySink`` buffers for tests, and
+``obs/export.py`` folds instant events into the Chrome trace.
+
+With no sinks attached ``emit`` is a cheap no-op (one attribute check),
+so library code — the comm planner, the checkpoint manager, the tuner —
+can emit unconditionally without launchers paying for it.  Everything
+here is host-side Python: nothing in this module touches a trace, so the
+compiled HLO is byte-identical whether or not events flow.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+
+@dataclass(frozen=True)
+class Event:
+    """One structured observation.  ``kind`` names the schema of ``data``
+    (docs/observability.md has the catalog); ``step`` is the training /
+    serving step it belongs to (None for out-of-band events); ``ts`` is
+    host wall-clock seconds (time.time)."""
+    kind: str
+    ts: float
+    step: Optional[int] = None
+    data: Dict[str, Any] = field(default_factory=dict)
+
+    def to_json(self) -> str:
+        rec = {"kind": self.kind, "ts": self.ts}
+        if self.step is not None:
+            rec["step"] = self.step
+        rec.update(self.data)
+        return json.dumps(rec, default=str, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, line: str) -> "Event":
+        rec = json.loads(line)
+        kind = rec.pop("kind")
+        ts = rec.pop("ts")
+        step = rec.pop("step", None)
+        return cls(kind=kind, ts=ts, step=step, data=rec)
+
+
+# ------------------------------------------------------------------ sinks --
+
+
+class MemorySink:
+    """Buffers events in memory (tests, exporters)."""
+
+    def __init__(self):
+        self.events: List[Event] = []
+
+    def __call__(self, ev: Event) -> None:
+        self.events.append(ev)
+
+    def of_kind(self, kind: str) -> List[Event]:
+        return [e for e in self.events if e.kind == kind]
+
+
+class JsonlSink:
+    """Appends one JSON line per event; flushed per event so a crashed
+    run keeps everything emitted before the crash."""
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._f = open(path, "a", buffering=1)
+        self._lock = threading.Lock()
+
+    def __call__(self, ev: Event) -> None:
+        with self._lock:
+            self._f.write(ev.to_json() + "\n")
+
+    def close(self) -> None:
+        with self._lock:
+            self._f.close()
+
+
+def read_jsonl(path: str) -> List[Event]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(Event.from_json(line))
+    return out
+
+
+# ------------------------------------------------- console rendering -------
+
+
+def _fmt_straggler(e: Event) -> str:
+    d = e.data
+    s = (f"[straggler] step {e.step} took {d.get('dt', 0.0):.2f}s "
+         f"(ema {d.get('ema', 0.0):.2f}s, "
+         f"threshold {d.get('factor', 0.0):.1f}x)")
+    phases = d.get("phases")
+    if phases:
+        s += " " + " ".join(f"{k}={v * 1e3:.0f}ms"
+                            for k, v in phases.items())
+    return s
+
+
+def _fmt_comm_plan(e: Event) -> str:
+    d = e.data
+    tag = "[comm] degraded:" if d.get("degraded") else "[comm] plan:"
+    return (f"{tag} {d.get('algorithm')} on axis "
+            f"{d.get('axis', 'model')!r} ({d.get('reason', '')})")
+
+
+def _fmt_step(e: Event) -> str:
+    d = e.data
+    comm = f" comm={d['comm']}" if d.get("comm") else ""
+    return (f"step {e.step} loss {d.get('loss', 0.0):.4f} "
+            f"ce {d.get('ce', 0.0):.4f} lr {d.get('lr', 0.0):.2e} "
+            f"{d.get('dt', 0.0):.2f}s skips {int(d.get('skips', 0))}{comm}")
+
+
+def _fmt_tune_probe(e: Event) -> str:
+    d = e.data
+    extra = f" chunks={d['chunks']}" if (d.get("chunks") or 1) > 1 else ""
+    return (f"[tune] probe {d.get('name')}/{d.get('wire_format')} "
+            f"{d.get('msg_bytes', 0) / 2**20:.2f}MiB"
+            f"{extra}: {d.get('seconds', 0.0) * 1e6:.0f}us")
+
+
+def _fmt_serve_request(e: Event) -> str:
+    d = e.data
+    return (f"[serve] request {d.get('request')} done: "
+            f"{d.get('latency_s', 0.0):.2f}s, "
+            f"{int(d.get('tokens', 0))} tokens")
+
+
+_RENDERERS: Dict[str, Callable[[Event], str]] = {
+    "straggler": _fmt_straggler,
+    "comm_plan": _fmt_comm_plan,
+    "step": _fmt_step,
+    "tune_probe": _fmt_tune_probe,
+    "serve_request": _fmt_serve_request,
+    "resume": lambda e: f"[train] resumed from step {e.data.get('from_step')}",
+    "preempt": lambda e: "[train] preempted; checkpointed",
+    "train_done": lambda e: (f"[train] done: {e.data.get('steps')} steps, "
+                             f"final loss {e.data.get('loss', 0.0):.4f}"),
+    "checkpoint_save": lambda e: (f"[ckpt] saved step {e.step} -> "
+                                  f"{e.data.get('path')}"),
+    "checkpoint_restore": lambda e: (f"[ckpt] restored step {e.step} from "
+                                     f"{e.data.get('path')}"),
+    "serve_summary": lambda e: (
+        f"[serve] {int(e.data.get('tokens', 0))} tokens in "
+        f"{e.data.get('dt', 0.0):.1f}s "
+        f"({e.data.get('tokens_per_s', 0.0):.1f} tok/s, "
+        f"{e.data.get('tokens_per_s_device', 0.0):.1f} tok/s/device); "
+        f"latency p50 {e.data.get('latency_p50_s', 0.0):.2f}s "
+        f"p99 {e.data.get('latency_p99_s', 0.0):.2f}s"),
+    "tune_result": lambda e: "[tune] " + str(e.data.get("describe", "")),
+    "error": lambda e: "error: " + str(e.data.get("message", "")),
+}
+
+
+def render(ev: Event) -> str:
+    fn = _RENDERERS.get(ev.kind)
+    if fn is not None:
+        return fn(ev)
+    body = " ".join(f"{k}={v}" for k, v in sorted(ev.data.items()))
+    step = f" step {ev.step}" if ev.step is not None else ""
+    return f"[{ev.kind}]{step} {body}".rstrip()
+
+
+class ConsoleSink:
+    """Human-readable one-liner per event — the rendering the launchers'
+    old ``print()`` calls produced, now just one subscriber among many.
+    ``kinds`` restricts rendering (None = everything); "error" events go
+    to stderr."""
+
+    def __init__(self, kinds: Optional[set] = None, stream: Any = None):
+        self.kinds = kinds
+        self.stream = stream
+
+    def __call__(self, ev: Event) -> None:
+        if self.kinds is not None and ev.kind not in self.kinds:
+            return
+        out = self.stream or (sys.stderr if ev.kind == "error"
+                              else sys.stdout)
+        print(render(ev), file=out, flush=True)
+
+
+# --------------------------------------------------------------- the log --
+
+
+class EventLog:
+    """Process-local fan-out: ``emit`` builds an Event and hands it to
+    every sink.  Sink exceptions are swallowed (observability must never
+    take down the step loop) except when ``strict`` is set (tests)."""
+
+    def __init__(self, strict: bool = False):
+        self._sinks: List[Callable[[Event], None]] = []
+        self.strict = strict
+
+    def add_sink(self, sink: Callable[[Event], None]) -> Callable:
+        self._sinks.append(sink)
+        return sink
+
+    def remove_sink(self, sink: Callable[[Event], None]) -> None:
+        if sink in self._sinks:
+            self._sinks.remove(sink)
+
+    @property
+    def active(self) -> bool:
+        return bool(self._sinks)
+
+    def emit(self, kind: str, step: Optional[int] = None,
+             **data: Any) -> Optional[Event]:
+        if not self._sinks:
+            return None
+        ev = Event(kind=kind, ts=time.time(), step=step, data=data)
+        for sink in list(self._sinks):
+            try:
+                sink(ev)
+            except Exception:
+                if self.strict:
+                    raise
+        return ev
+
+
+_GLOBAL = EventLog()
+
+
+def global_log() -> EventLog:
+    return _GLOBAL
+
+
+def emit(kind: str, step: Optional[int] = None, **data: Any
+         ) -> Optional[Event]:
+    """Emit on the process-global log (the library-code entry point)."""
+    return _GLOBAL.emit(kind, step=step, **data)

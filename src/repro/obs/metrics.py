@@ -1,0 +1,181 @@
+"""In-graph metrics: a typed, dtype-stable pytree of counters and gauges.
+
+``MetricBag`` is the structured replacement for the packed
+``stats["comm"]`` int32 vector: a registered pytree whose leaves are all
+float32 scalars, so it can ride every existing stats path unchanged —
+the model-stack ``lax.scan`` carry, the 1F1B pipeline grid's per-stage
+aux threading, microbatch accumulation scans, and dp-axis ``pmean`` over
+metric trees all stay legal (same treedef every iteration, inexact
+leaves only, nothing feeds the loss).
+
+Semantics are carried STATICALLY in the treedef (the schema is pytree
+aux data): a ``counter`` accumulates under ``merge`` (wire bytes summed
+across MoE layers and scan steps), a ``gauge`` is overwritten by the
+most recent writer (the planner flags are per-trace constants, slot
+occupancy is "last layer wins" exactly like the old comm vector).
+
+The MoE schema (``MOE_SCHEMA``) is fixed so every producer —
+``core/moe.py``, the stack scan's zero-init, the pipeline grid's
+stage-boundary carry — agrees on one treedef without plumbing config:
+
+  wire_bytes / raw_bytes     counter  bytes that crossed (or would have
+                                      crossed) the a2a wire this step,
+                                      both legs, all MoE layers — their
+                                      ratio is the live Eq. 5
+                                      compression rate
+  load_imbalance             gauge    max/mean of the psum'd per-expert
+                                      routed-token counts
+  drop_fraction              gauge    (token, choice) entries dropped to
+                                      the capacity overflow bin
+  slot_occupancy             gauge    occupied fraction of the LSH slot
+                                      axis (0 when LSH is off)
+  comm_algorithm/_degraded/
+  _calibrated/_wire_format   gauge    the planner record the old packed
+                                      vector carried, as f32 gauges
+
+With ``ObsConfig.enabled`` False nothing in this module is traced — the
+legacy int32 vector rides the stats plumbing byte-identically to the
+pre-obs program (tests/test_obs.py pins the compiled HLO).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+
+COUNTER = "counter"
+GAUGE = "gauge"
+KINDS = (COUNTER, GAUGE)
+
+# The fixed schema of the MoE layer bag (see module docstring).
+MOE_SCHEMA: Tuple[Tuple[str, str], ...] = (
+    ("wire_bytes", COUNTER),
+    ("raw_bytes", COUNTER),
+    ("load_imbalance", GAUGE),
+    ("drop_fraction", GAUGE),
+    ("slot_occupancy", GAUGE),
+    ("comm_algorithm", GAUGE),
+    ("comm_degraded", GAUGE),
+    ("comm_calibrated", GAUGE),
+    ("comm_wire_format", GAUGE),
+)
+
+
+@jax.tree_util.register_pytree_node_class
+class MetricBag:
+    """Immutable (functional) bag of named f32 scalar metrics.
+
+    The schema — ``((name, kind), ...)`` — is static pytree aux data:
+    two bags with the same schema have the same treedef, which is what
+    makes the bag a legal ``lax.scan`` carry and ``jax.tree.map``
+    target.  All mutators return a new bag."""
+
+    __slots__ = ("_schema", "_values")
+
+    def __init__(self, schema: Iterable[Tuple[str, str]], values):
+        self._schema = tuple((str(n), str(k)) for n, k in schema)
+        self._values = tuple(values)
+        if len(self._schema) != len(self._values):
+            raise ValueError(
+                f"schema has {len(self._schema)} entries, got "
+                f"{len(self._values)} values")
+
+    # ---------------------------------------------------------- pytree --
+
+    def tree_flatten(self):
+        return self._values, self._schema
+
+    @classmethod
+    def tree_unflatten(cls, schema, values):
+        return cls(schema, values)
+
+    # --------------------------------------------------------- identity --
+
+    @classmethod
+    def zeros(cls, schema: Iterable[Tuple[str, str]] = MOE_SCHEMA
+              ) -> "MetricBag":
+        schema = tuple(schema)
+        for name, kind in schema:
+            if kind not in KINDS:
+                raise ValueError(f"metric {name!r}: unknown kind {kind!r}")
+        return cls(schema, (jnp.zeros((), jnp.float32),) * len(schema))
+
+    @property
+    def schema(self) -> Tuple[Tuple[str, str], ...]:
+        return self._schema
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self._schema)
+
+    def kind(self, name: str) -> str:
+        return self._schema[self._index(name)][1]
+
+    def _index(self, name: str) -> int:
+        for i, (n, _) in enumerate(self._schema):
+            if n == name:
+                return i
+        raise KeyError(f"metric {name!r} not in schema "
+                       f"{[n for n, _ in self._schema]}")
+
+    # -------------------------------------------------------- accessors --
+
+    def get(self, name: str) -> jax.Array:
+        return self._values[self._index(name)]
+
+    def set(self, name: str, value) -> "MetricBag":
+        """Overwrite ``name`` (counter or gauge) with ``value`` (f32)."""
+        i = self._index(name)
+        vals = list(self._values)
+        vals[i] = jnp.asarray(value, jnp.float32)
+        return MetricBag(self._schema, vals)
+
+    def inc(self, name: str, delta) -> "MetricBag":
+        """Accumulate onto counter ``name``; rejects gauges (an
+        accumulated gauge silently means something else)."""
+        i = self._index(name)
+        if self._schema[i][1] != COUNTER:
+            raise ValueError(f"metric {name!r} is a {self._schema[i][1]}, "
+                             f"not a counter — use .set()")
+        vals = list(self._values)
+        vals[i] = vals[i] + jnp.asarray(delta, jnp.float32)
+        return MetricBag(self._schema, vals)
+
+    # ------------------------------------------------------------ merge --
+
+    def merge(self, other: "MetricBag") -> "MetricBag":
+        """Fold ``other`` (the newer observation) into this bag:
+        counters add, gauges take ``other``'s value.  This is the layer
+        scan's carry update — associative over counters, last-writer-wins
+        over gauges, exactly the semantics the old comm vector had."""
+        if other._schema != self._schema:
+            raise ValueError(f"schema mismatch: {self._schema} vs "
+                             f"{other._schema}")
+        vals = [a + b if kind == COUNTER else b
+                for (name, kind), a, b in zip(self._schema, self._values,
+                                              other._values)]
+        return MetricBag(self._schema, vals)
+
+    # ----------------------------------------------------------- export --
+
+    def as_metrics(self, prefix: str = "obs_") -> Dict[str, jax.Array]:
+        """Flatten into a metrics dict (f32 scalars) for the step metrics
+        tree — dp-``pmean`` over the dict stays well-typed."""
+        return {prefix + name: v
+                for (name, _), v in zip(self._schema, self._values)}
+
+
+def merge_stat(old, new):
+    """Carry update for the stats plumbing's 4th slot, which is EITHER
+    the legacy packed int32 comm vector (obs off: overwrite, the old
+    behavior) or a ``MetricBag`` (obs on: counters accumulate)."""
+    if isinstance(new, MetricBag):
+        if isinstance(old, MetricBag):
+            return old.merge(new)
+        return new
+    return new
+
+
+def is_bag(x) -> bool:
+    return isinstance(x, MetricBag)

@@ -40,6 +40,8 @@ import jax.numpy as jnp
 from repro.comm import planner as comm_planner
 from repro.configs.base import MOE, ModelConfig, OptimizerConfig
 from repro.models import model as model_lib
+from repro.obs import tracing as obs_tracing
+from repro.obs.tracing import phase_scope
 from repro.runtime.sharding import constrain
 
 F, B = "F", "B"
@@ -140,7 +142,8 @@ def stage_transfer(x, mesh):
     the same logical spec the next block pins, so on today's
     pipe-replicated layout it is the identity (bit-identical stacks);
     the planner records and prices it (plan_stage_transfers)."""
-    return constrain(x, mesh, "batch", "seq", None)
+    with phase_scope(obs_tracing.PH_STAGE):
+        return constrain(x, mesh, "batch", "seq", None)
 
 
 def _partition(tree):
@@ -254,7 +257,7 @@ def make_pipeline_grad_fn(cfg: ModelConfig, mesh, *,
         e_pad = model_lib._find_epad(params["blocks"], cfg.layout)
         zeros3 = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
                   jnp.zeros((e_pad if n_moe else 1,), jnp.float32))
-        comm0 = jnp.array([-1, 0, 0, -1], jnp.int32)
+        comm0 = model_lib.initial_comm_stat(cfg, cfg.layout)
 
         # accumulators mirror runtime/step.accum_grads term for term
         # (None marks non-floating params; finalized to f32 scalar zeros)
@@ -332,7 +335,8 @@ def make_pipeline_grad_fn(cfg: ModelConfig, mesh, *,
         comm_planner.plan_stage_transfers(mesh, cfg.moe.comm,
                                           msg_bytes=act_bytes)
         with comm_planner.pipeline_context(stages, n_mb,
-                                           sched.bubble_fraction()):
+                                           sched.bubble_fraction()), \
+                obs_tracing.activate(cfg.moe.obs.phase_tracing):
             return _run(params, batch)
 
     return grad_fn

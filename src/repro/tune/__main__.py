@@ -13,7 +13,6 @@ from __future__ import annotations
 import argparse
 import logging
 import os
-import sys
 
 
 def main(argv=None) -> int:
@@ -42,6 +41,8 @@ def main(argv=None) -> int:
                     help="override $REPRO_TUNE_CACHE for this run")
     ap.add_argument("--no-store", action="store_true",
                     help="probe and report without writing the cache")
+    ap.add_argument("--metrics-dir", default="",
+                    help="also write structured events (events.jsonl) here")
     ap.add_argument("-v", "--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -58,25 +59,44 @@ def main(argv=None) -> int:
     import jax                            # first jax touch — after XLA_FLAGS
 
     from repro.launch.mesh import make_host_mesh
+    from repro.obs import events as obs_events
+    from repro.obs import export as obs_export
     from repro.tune.autotune import DEFAULT_LADDER, autotune
 
-    n = len(jax.devices())
-    model = args.model or max(1, n // max(1, args.data))
-    if args.data * model > n:
-        print(f"error: mesh {args.data}x{model} needs {args.data * model} "
-              f"devices, have {n}", file=sys.stderr)
-        return 2
-    mesh = make_host_mesh(args.data, 1, model, node_size=args.node_size)
-    ladder = tuple(int(b) for b in args.ladder.split(",") if b) \
-        or DEFAULT_LADDER
-    choices = autotune(
-        mesh, axis_name="model", ladder=ladder,
-        wire_formats=tuple(f for f in args.wire_formats.split(",") if f),
-        chunk_candidates=tuple(int(k) for k in args.chunks.split(",") if k),
-        warmup=args.warmup, iters=args.iters, store=not args.no_store,
-        verbose=args.verbose)
-    print(choices.describe())
-    return 0
+    log = obs_events.global_log()
+    log.add_sink(obs_events.ConsoleSink())
+    jsonl = None
+    if args.metrics_dir:
+        os.makedirs(args.metrics_dir, exist_ok=True)
+        jsonl = obs_events.JsonlSink(
+            os.path.join(args.metrics_dir, obs_export.EVENTS_NAME))
+        log.add_sink(jsonl)
+    try:
+        n = len(jax.devices())
+        model = args.model or max(1, n // max(1, args.data))
+        if args.data * model > n:
+            obs_events.emit(
+                "error", where="tune",
+                message=(f"mesh {args.data}x{model} needs "
+                         f"{args.data * model} devices, have {n}"))
+            return 2
+        mesh = make_host_mesh(args.data, 1, model, node_size=args.node_size)
+        ladder = tuple(int(b) for b in args.ladder.split(",") if b) \
+            or DEFAULT_LADDER
+        choices = autotune(
+            mesh, axis_name="model", ladder=ladder,
+            wire_formats=tuple(f for f in args.wire_formats.split(",")
+                               if f),
+            chunk_candidates=tuple(int(k) for k in args.chunks.split(",")
+                                   if k),
+            warmup=args.warmup, iters=args.iters, store=not args.no_store,
+            verbose=args.verbose)
+        print(choices.describe())
+        return 0
+    finally:
+        if jsonl is not None:
+            log.remove_sink(jsonl)
+            jsonl.close()
 
 
 if __name__ == "__main__":

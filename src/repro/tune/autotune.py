@@ -16,6 +16,7 @@ from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
 from repro.comm.topology import Topology, build_topology
+from repro.obs import events as obs_events
 from repro.tune import cache as cache_lib
 from repro.tune import probe as probe_lib
 from repro.tune.fingerprint import fingerprint_for
@@ -96,6 +97,11 @@ def autotune(mesh, comm=None, *, axis_name: str = "model",
         wire_formats=tuple(wire_formats),
         chunk_candidates=tuple(chunk_candidates), warmup=warmup,
         iters=iters, include_kernels=include_kernels, verbose=verbose)
+    for r in rows:
+        obs_events.emit("tune_probe", kind=r.kind, name=r.name,
+                        wire_format=r.wire_format,
+                        msg_bytes=int(r.msg_bytes), chunks=r.chunks,
+                        seconds=float(r.seconds))
     consts = fit_link_constants(rows, topo, axis_name) or {}
     consts.pop("n_fit_rows", None)
     calib = CalibratedCostModel(key=fp.key(), measured=tuple(rows),
@@ -112,6 +118,10 @@ def autotune(mesh, comm=None, *, axis_name: str = "model",
                     axis_name, topo.axis_size(axis_name))
     elif store:
         path = cache_lib.store(fp, calib.to_payload())
+    obs_events.emit("tune_result", fingerprint=fp.key(), n_rows=len(rows),
+                    cache_path=path,
+                    best_transport=[list(t) for t in best_transport],
+                    best_chunks=[list(t) for t in best_chunks])
     return TunedChoices(key=fp.key(), cache_path=path, model=calib,
                         best_transport=best_transport,
                         best_chunks=best_chunks, n_rows=len(rows))
