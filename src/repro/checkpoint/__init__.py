@@ -1,2 +1,4 @@
-from repro.checkpoint.checkpoint import (CheckpointManager, load_checkpoint,
+from repro.checkpoint.checkpoint import (CheckpointCorruptError,
+                                         CheckpointError, CheckpointManager,
+                                         committed_steps, load_checkpoint,
                                          save_checkpoint)

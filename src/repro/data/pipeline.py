@@ -1,4 +1,14 @@
-"""Host-side input pipeline: background prefetch + device placement."""
+"""Host-side input pipeline: background prefetch + device placement.
+
+Robustness contract (docs/resilience.md): a stalled producer is
+*detected*, not silently waited on — with ``stall_timeout_s`` set,
+``PrefetchIterator`` emits a ``data_stall`` event each timeout interval
+the queue stays empty and, past ``stall_max_s``, raises
+``DataStallError`` instead of hanging the train loop forever (the step
+watchdog would otherwise be the only thing that notices, and it kills
+the whole process).  Producer exhaustion raises ``StopIteration``;
+producer exceptions re-raise on the consumer thread.
+"""
 from __future__ import annotations
 
 import queue
@@ -7,17 +17,31 @@ from typing import Callable, Iterator, Optional
 
 import jax
 
+from repro.obs import events as obs_events
+
+
+class DataStallError(RuntimeError):
+    """The input pipeline produced nothing for longer than
+    ``stall_max_s`` — a dead loader, not a slow batch."""
+
+
+_DONE = object()    # producer-thread sentinel: exhausted or errored
+
 
 class PrefetchIterator:
     """Wraps a host iterator with a daemon prefetch thread (depth-bounded)
     and optional device put (sharding-aware)."""
 
     def __init__(self, it: Iterator, depth: int = 2,
-                 place: Optional[Callable] = None):
+                 place: Optional[Callable] = None,
+                 stall_timeout_s: Optional[float] = None,
+                 stall_max_s: Optional[float] = None):
         self._it = it
         self._place = place
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._err = None
+        self._stall_timeout = stall_timeout_s
+        self._stall_max = stall_max_s
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
@@ -32,15 +56,35 @@ class PrefetchIterator:
                 self._q.put(item)
         except Exception as e:  # surfaced on next()
             self._err = e
-            self._q.put(None)
+        self._q.put(_DONE)
+
+    def _get(self):
+        if self._stall_timeout is None:
+            return self._q.get()
+        waited = 0.0
+        while True:
+            try:
+                return self._q.get(timeout=self._stall_timeout)
+            except queue.Empty:
+                waited += self._stall_timeout
+                obs_events.emit("data_stall", waited_s=round(waited, 3),
+                                timeout_s=self._stall_timeout)
+                if self._stall_max is not None and waited >= self._stall_max:
+                    raise DataStallError(
+                        f"input pipeline produced nothing for "
+                        f"{waited:.1f}s (stall_max_s={self._stall_max})"
+                    ) from None
 
     def __iter__(self):
         return self
 
     def __next__(self):
-        item = self._q.get()
-        if item is None and self._err is not None:
-            raise self._err
+        item = self._get()
+        if item is _DONE:
+            self._q.put(_DONE)          # keep terminal on repeated calls
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
         return item
 
     def close(self):

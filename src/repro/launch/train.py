@@ -8,6 +8,32 @@ committed step), async checkpointing, NaN-skip, step watchdog, straggler
 monitor, hot-expert rebalancing, preemption (SIGTERM -> checkpoint ->
 exit 42), --auto-restart supervisor loop.
 
+Fault tolerance (docs/resilience.md — every path below is chaos-tested
+by tests/test_resilience.py):
+
+ * ``--auto-restart`` supervises via ``resilience.supervisor``: child
+   exits are CLASSIFIED — preemption (42) restarts for free, watchdog
+   (43) / death-by-signal / crash restart under a rolling budget
+   ($MAX_RESTARTS within $RESTART_WINDOW_S, exponential backoff + jitter
+   from $RESTART_BACKOFF_S), usage errors (2) never restart.
+ * checkpoints carry per-shard sha256 digests; a bit-flipped or
+   truncated shard is detected at restore, quarantined
+   (``checkpoint_corrupt`` event) and the run resumes from the previous
+   committed step.  Failed async saves re-raise from the manager
+   (``checkpoint_error`` event) instead of silently looking committed.
+ * SIGKILL at an arbitrary step + ``--auto-restart`` resume produces a
+   post-resume loss trajectory bitwise identical to an uninterrupted
+   run (``ds.batch_at(step)`` is deterministic; the committed-step
+   protocol restores exact bytes).
+ * ``--chaos SPEC`` / ``$REPRO_CHAOS`` injects deterministic,
+   step-addressed faults for rehearsal: ``nan_grads@k`` (grad-skip
+   path), ``hang@k[:s]`` (watchdog bait), ``sigterm@k`` / ``sigkill@k``,
+   ``ckpt_flip@k`` / ``ckpt_truncate@k`` (shard corruption),
+   ``tune_corrupt@k``, ``data_stall@k[:s]``; ``seed=N`` seeds the
+   bit-flip positions.  Each injection is a typed ``chaos`` event; with
+   chaos off the compiled train step is byte-identical to a build
+   without the chaos hook.
+
 Observability (docs/observability.md): every line this launcher prints
 is a structured event rendered by ``obs.events.ConsoleSink``;
 ``--metrics-dir DIR`` additionally turns on the in-graph metrics +
@@ -29,24 +55,44 @@ import numpy as np
 
 
 def supervise(argv) -> int:
-    """--auto-restart: relaunch the trainer on watchdog/preemption exits."""
+    """--auto-restart: exit-code-aware relaunch loop
+    (resilience.supervisor — preemptions restart for free, watchdog /
+    crash exits restart under a rolling budget with backoff, usage
+    errors don't restart)."""
     from repro.obs import events as obs_events
+    from repro.obs import export as obs_export
+    from repro.resilience import supervisor as sup
     log = obs_events.global_log()
-    sink = obs_events.ConsoleSink() if not log.active else None
-    if sink is not None:
-        log.add_sink(sink)
-    attempts = 0
+    sinks = []
+    if not log.active:
+        sinks.append(log.add_sink(obs_events.ConsoleSink()))
+    # restart decisions belong in the run's events.jsonl alongside the
+    # child's events (the sink appends; child and supervisor interleave)
+    metrics_dir = None
+    for i, a in enumerate(argv):
+        if a == "--metrics-dir" and i + 1 < len(argv):
+            metrics_dir = argv[i + 1]
+        elif a.startswith("--metrics-dir="):
+            metrics_dir = a.split("=", 1)[1]
+    jsonl = None
+    if metrics_dir:
+        os.makedirs(metrics_dir, exist_ok=True)
+        jsonl = obs_events.JsonlSink(
+            os.path.join(metrics_dir, obs_export.EVENTS_NAME))
+        sinks.append(log.add_sink(jsonl))
     child_args = [a for a in argv if a != "--auto-restart"]
-    while True:
-        proc = subprocess.run([sys.executable, "-m", "repro.launch.train",
-                               *child_args])
-        if proc.returncode == 0:
-            return 0
-        attempts += 1
-        if attempts > int(os.environ.get("MAX_RESTARTS", "3")):
-            return proc.returncode
-        obs_events.emit("restart", attempt=attempts,
-                        exit_code=proc.returncode)
+
+    def run_child() -> int:
+        return subprocess.run([sys.executable, "-m", "repro.launch.train",
+                               *child_args]).returncode
+
+    try:
+        return sup.supervise(run_child)
+    finally:
+        for s in sinks:
+            log.remove_sink(s)
+        if jsonl is not None:
+            jsonl.close()
 
 
 def main() -> int:
@@ -66,6 +112,10 @@ def main() -> int:
                     help="flag a step as a straggler when it exceeds this "
                          "multiple of the EMA step time")
     ap.add_argument("--auto-restart", action="store_true")
+    ap.add_argument("--chaos", default=os.environ.get("REPRO_CHAOS", ""),
+                    help="deterministic fault-injection spec, e.g. "
+                         "'nan_grads@3,sigkill@5,hang@7:2.5,seed=1' "
+                         "(docs/resilience.md; also $REPRO_CHAOS)")
     ap.add_argument("--mesh-data", type=int, default=1,
                     help="data-axis extent of the training mesh")
     ap.add_argument("--mesh-model", type=int, default=1,
@@ -158,6 +208,21 @@ def main() -> int:
         if calib is not None:
             obs_events.emit("tune_calibrated", fingerprint=calib.key)
 
+    chaos = None
+    if args.chaos:
+        from repro.resilience.faults import STATE_NAME, FaultPlan
+        try:
+            chaos = FaultPlan.parse(args.chaos)
+        except ValueError as exc:
+            obs_events.emit("error", where="chaos", message=str(exc))
+            return 2
+        state_dir = args.ckpt or args.metrics_dir
+        if state_dir:
+            # fired-markers must survive the kills the plan itself causes
+            os.makedirs(state_dir, exist_ok=True)
+            chaos.bind_state(os.path.join(state_dir, STATE_NAME))
+        obs_events.emit("chaos_plan", spec=chaos.describe())
+
     ds = SyntheticLMDataset(cfg.vocab_size, args.seq, args.batch,
                             num_shards=jax.process_count(),
                             shard=jax.process_index())
@@ -232,9 +297,14 @@ def main() -> int:
                                               use_lsh=use_lsh,
                                               microbatch=0))
             for s in range(start, args.steps):
+                batch = ds.batch_at(s)
                 watchdog.arm()
+                if chaos is not None:
+                    # after arm(): a hang fault must trip the watchdog
+                    chaos.on_step_start(s)
+                    batch = chaos.chaos_batch(batch, s)
                 timeline.start(s)
-                state, metrics = step_fn(state, ds.batch_at(s))
+                state, metrics = step_fn(state, batch)
                 loss = float(metrics["loss"])  # blocks; completes the step
                 watchdog.disarm()
                 rec = timeline.stop(s)
@@ -286,6 +356,8 @@ def main() -> int:
                     return 42
                 if want_ckpt:
                     mgr.save_async(s + 1, state)
+                if chaos is not None:
+                    chaos.on_step_end(s, manager=mgr, ckpt_dir=args.ckpt)
             if mgr:
                 mgr.save_async(args.steps, state)
                 mgr.wait()

@@ -144,6 +144,15 @@ def _fmt_serve_request(e: Event) -> str:
             f"{int(d.get('tokens', 0))} tokens")
 
 
+def _fmt_chaos(e: Event) -> str:
+    d = e.data
+    detail = " ".join(f"{k}={v}" for k, v in sorted(d.items())
+                      if k not in ("fault", "fault_step", "fault_id", "seed"))
+    s = (f"[chaos] inject {d.get('fault')}@{d.get('fault_step')} "
+         f"at step {e.step}")
+    return s + (f" ({detail})" if detail else "")
+
+
 _RENDERERS: Dict[str, Callable[[Event], str]] = {
     "straggler": _fmt_straggler,
     "comm_plan": _fmt_comm_plan,
@@ -167,6 +176,35 @@ _RENDERERS: Dict[str, Callable[[Event], str]] = {
         f"p99 {e.data.get('latency_p99_s', 0.0):.2f}s"),
     "tune_result": lambda e: "[tune] " + str(e.data.get("describe", "")),
     "error": lambda e: "error: " + str(e.data.get("message", "")),
+    "chaos": _fmt_chaos,
+    "chaos_plan": lambda e: f"[chaos] plan: {e.data.get('spec')}",
+    "watchdog": lambda e: (
+        f"[watchdog] step exceeded {e.data.get('timeout_s', 0.0):.1f}s "
+        f"(fire #{int(e.data.get('fired', 1))})"),
+    "data_stall": lambda e: (
+        f"[data] pipeline stalled {e.data.get('waited_s', 0.0):.1f}s "
+        f"(timeout {e.data.get('timeout_s', 0.0):.1f}s)"),
+    "checkpoint_corrupt": lambda e: (
+        f"[ckpt] CORRUPT step {e.step} at {e.data.get('path')}: "
+        f"{e.data.get('reason', '')} -> quarantined "
+        f"{e.data.get('quarantined')}"),
+    "checkpoint_error": lambda e: (
+        f"[ckpt] async save of step {e.step} FAILED: "
+        f"{e.data.get('error', '')}"),
+    "tune_cache_reject": lambda e: (
+        f"[tune] cache reject: {e.data.get('reason', '')}"),
+    "restart": lambda e: (
+        f"[supervisor] restart #{int(e.data.get('attempt', 0))}: child "
+        f"exit {e.data.get('exit_code')} "
+        f"({e.data.get('classification')}), "
+        + (f"budget {e.data.get('budget_used')}/{e.data.get('budget')}, "
+           if e.data.get("budgeted") else "free (preemption), ")
+        + f"backoff {e.data.get('backoff_s', 0.0):.1f}s"),
+    "restart_budget_exhausted": lambda e: (
+        f"[supervisor] restart budget exhausted "
+        f"({e.data.get('budget')} budgeted restarts within "
+        f"{e.data.get('window_s', 0.0):.0f}s); giving up with child "
+        f"exit {e.data.get('exit_code')}"),
 }
 
 

@@ -1,0 +1,25 @@
+"""Chaos-verified fault tolerance (docs/resilience.md).
+
+Two host-side components that make the launcher's recovery story
+*rehearsable* instead of merely claimed:
+
+  * ``resilience.faults`` — ``FaultPlan``, a deterministic, seeded,
+    step-addressed fault-injection plan parsed from ``--chaos SPEC`` /
+    ``$REPRO_CHAOS``.  Every injected fault is emitted as a typed
+    ``chaos`` event on the obs event log, and process-killing /
+    file-corrupting faults persist a fired-marker so a supervised
+    restart does not re-inject them.
+  * ``resilience.supervisor`` — the exit-code-aware ``--auto-restart``
+    loop: classifies child exits (preemption 42 / watchdog 43 / signal /
+    crash / usage error), restarts only restartable ones under a rolling
+    restart budget with exponential backoff + deterministic jitter, and
+    never charges preemptions against the budget.
+
+Nothing here touches a JAX trace: with chaos off the compiled train
+step is byte-identical to a build without this package
+(tests/test_resilience.py pins it).
+"""
+from repro.resilience.faults import FaultPlan
+from repro.resilience.supervisor import classify_exit, supervise
+
+__all__ = ["FaultPlan", "classify_exit", "supervise"]

@@ -1,0 +1,130 @@
+"""Exit-code-aware restart supervisor (docs/resilience.md).
+
+``launch/train.py --auto-restart`` used to count every non-zero child
+exit against one flat ``MAX_RESTARTS`` budget and relaunch immediately.
+That policy burns the whole budget on routine preemptions and hammers a
+crashing fleet with restart storms.  This supervisor:
+
+  * **classifies** child exits — preemption (42) and watchdog (43) from
+    ``runtime.fault``, death-by-signal (negative returncode), usage
+    errors (2), anything else a crash;
+  * restarts only **restartable** classes (usage errors never restart —
+    a bad flag will not get better);
+  * charges only **budgeted** classes (watchdog / signal / crash)
+    against a *rolling* restart budget (``MAX_RESTARTS`` within
+    ``RESTART_WINDOW_S``) — preemptions restart for free, so a
+    preemption-heavy fleet never exhausts its crash budget;
+  * sleeps exponential backoff + deterministic jitter
+    (``RESTART_BACKOFF_S`` base, doubled per budgeted restart in the
+    window, capped) before budgeted restarts.
+
+Every decision is emitted as a typed event (``restart``,
+``restart_budget_exhausted``) so the whole recovery story is visible in
+events.jsonl.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.obs import events as obs_events
+from repro.runtime.fault import EXIT_PREEMPTED, EXIT_WATCHDOG
+
+EXIT_OK = 0
+EXIT_USAGE = 2
+
+ENV_MAX_RESTARTS = "MAX_RESTARTS"
+ENV_WINDOW_S = "RESTART_WINDOW_S"
+ENV_BACKOFF_S = "RESTART_BACKOFF_S"
+
+
+@dataclass(frozen=True)
+class ExitClass:
+    """What a child exit code means for the restart policy."""
+    name: str
+    restart: bool       # relaunch at all?
+    budgeted: bool      # counts against the rolling restart budget?
+
+
+def classify_exit(code: int) -> ExitClass:
+    if code == EXIT_OK:
+        return ExitClass("done", restart=False, budgeted=False)
+    if code == EXIT_PREEMPTED:
+        # SIGTERM -> checkpoint -> 42: the child already made itself
+        # durable; restarting is free and must never burn crash budget
+        return ExitClass("preempted", restart=True, budgeted=False)
+    if code == EXIT_WATCHDOG:
+        return ExitClass("watchdog", restart=True, budgeted=True)
+    if code == EXIT_USAGE:
+        return ExitClass("usage_error", restart=False, budgeted=False)
+    if code < 0:
+        # subprocess returncode -N: child died on signal N (SIGKILL,
+        # SIGSEGV, OOM-killer ...) — restartable crash
+        return ExitClass(f"signal_{-code}", restart=True, budgeted=True)
+    return ExitClass("crash", restart=True, budgeted=True)
+
+
+def backoff_seconds(n_budgeted: int, base: float, cap: float,
+                    rng: np.random.Generator) -> float:
+    """Exponential in the number of budgeted restarts inside the rolling
+    window, capped, with up to +25% deterministic jitter (seeded rng) so
+    a fleet of supervisors does not restart in lockstep."""
+    if base <= 0:
+        return 0.0
+    b = min(cap, base * (2.0 ** max(0, n_budgeted - 1)))
+    return float(b * (1.0 + 0.25 * rng.random()))
+
+
+def supervise(run_child: Callable[[], int], *,
+              max_restarts: Optional[int] = None,
+              window_s: Optional[float] = None,
+              backoff_base_s: Optional[float] = None,
+              backoff_cap_s: float = 60.0,
+              seed: int = 0,
+              sleep: Callable[[float], None] = time.sleep,
+              clock: Callable[[], float] = time.monotonic) -> int:
+    """Run ``run_child`` until it finishes, restarting per the policy
+    above.  Returns the final child exit code (0 on success, the last
+    failing code when the budget is exhausted or the class does not
+    restart)."""
+    if max_restarts is None:
+        max_restarts = int(os.environ.get(ENV_MAX_RESTARTS, "3"))
+    if window_s is None:
+        window_s = float(os.environ.get(ENV_WINDOW_S, "3600"))
+    if backoff_base_s is None:
+        backoff_base_s = float(os.environ.get(ENV_BACKOFF_S, "1.0"))
+    rng = np.random.default_rng(np.random.SeedSequence([seed]))
+    budget_marks: list = []     # clock() stamps of budgeted restarts
+    attempts = 0
+    while True:
+        code = run_child()
+        cls = classify_exit(code)
+        if not cls.restart:
+            if code != EXIT_OK:
+                obs_events.emit("error", where="supervise",
+                                message=(f"child exit {code} "
+                                         f"({cls.name}): not restartable"))
+            return code
+        wait = 0.0
+        if cls.budgeted:
+            now = clock()
+            budget_marks = [t for t in budget_marks if now - t < window_s]
+            if len(budget_marks) >= max_restarts:
+                obs_events.emit("restart_budget_exhausted",
+                                exit_code=code, classification=cls.name,
+                                budget=max_restarts, window_s=window_s)
+                return code
+            budget_marks.append(now)
+            wait = backoff_seconds(len(budget_marks), backoff_base_s,
+                                   backoff_cap_s, rng)
+        attempts += 1
+        obs_events.emit("restart", attempt=attempts, exit_code=code,
+                        classification=cls.name, budgeted=cls.budgeted,
+                        budget_used=len(budget_marks),
+                        budget=max_restarts, backoff_s=round(wait, 3))
+        if wait > 0:
+            sleep(wait)

@@ -6,6 +6,9 @@ Components (DESIGN.md §7):
    relaunches from the last committed checkpoint.
  * ``StragglerMonitor`` — per-step wall-time EMA; flags steps slower than
    ``threshold×`` the EMA (on real fleets this feeds re-pod decisions).
+   The first ``warmup`` samples (compile-dominated) never seed the EMA,
+   and a flagged sample is clamped to the flagging threshold before the
+   EMA update — one hang must not inflate the baseline and mask the next.
  * ``ExpertRebalancer`` — per-expert load EMA from the MoE layer's psum'd
    counts; emits a placement permutation that pairs hot experts with cold
    ranks (applied at checkpoint boundaries via
@@ -23,14 +26,23 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
+from repro.obs import events as obs_events
+
 EXIT_PREEMPTED = 42
 EXIT_WATCHDOG = 43
 
 
 class StepWatchdog:
+    """``arm()`` before each step, ``disarm()`` after.  A deadline miss
+    emits a ``watchdog`` event and calls ``on_timeout`` (default: exit
+    43, which the supervisor classifies as a budgeted restart).  The
+    monitor thread survives a non-exiting ``on_timeout`` callback and
+    keeps honoring subsequent ``arm()`` calls — one fire per arm."""
+
     def __init__(self, timeout_s: float, on_timeout: Optional[Callable] = None):
         self.timeout_s = timeout_s
         self.on_timeout = on_timeout or (lambda: os._exit(EXIT_WATCHDOG))
+        self.fired = 0
         self._deadline = None
         self._lock = threading.Lock()
         self._stop = threading.Event()
@@ -50,27 +62,45 @@ class StepWatchdog:
 
     def _run(self):
         while not self._stop.wait(0.5):
+            fire = False
             with self._lock:
-                d = self._deadline
-            if d is not None and time.monotonic() > d:
+                if self._deadline is not None \
+                        and time.monotonic() > self._deadline:
+                    self._deadline = None   # one shot per arm()
+                    fire = True
+            if fire:
+                self.fired += 1
+                obs_events.emit("watchdog", timeout_s=self.timeout_s,
+                                fired=self.fired)
                 self.on_timeout()
-                return
 
 
 class StragglerMonitor:
-    def __init__(self, threshold: float = 2.0, ema: float = 0.9):
+    def __init__(self, threshold: float = 2.0, ema: float = 0.9,
+                 warmup: int = 1):
         self.threshold = threshold
         self.ema_coef = ema
+        self.warmup = warmup
         self.ema: Optional[float] = None
         self.flagged: List[int] = []
+        self._seen = 0
 
     def record(self, step: int, dt: float) -> bool:
+        self._seen += 1
+        if self._seen <= self.warmup:
+            # compile-dominated first step(s): seeding the EMA with them
+            # would mask every real straggler for dozens of steps
+            return False
         is_straggler = (self.ema is not None
                         and dt > self.threshold * self.ema)
+        sample = dt
         if is_straggler:
             self.flagged.append(step)
-        self.ema = dt if self.ema is None else \
-            self.ema_coef * self.ema + (1 - self.ema_coef) * dt
+            # clamp the straggler's own sample: folding a 50x hang into
+            # the EMA inflates the baseline and masks the next hang
+            sample = self.threshold * self.ema
+        self.ema = sample if self.ema is None else \
+            self.ema_coef * self.ema + (1 - self.ema_coef) * sample
         return is_straggler
 
 

@@ -346,11 +346,14 @@ def make_pipeline_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
                              mesh, *, use_lsh: Optional[bool] = None):
     """1F1B train_step(state, batch) -> (state, metrics) for meshes with a
     pipe axis; the optimizer tail is shared with runtime/step."""
-    from repro.runtime.step import apply_gradients
+    from repro.runtime.step import (apply_chaos_scale, apply_gradients,
+                                    split_chaos_scale)
     grad_fn = make_pipeline_grad_fn(cfg, mesh, use_lsh=use_lsh)
 
     def train_step(state, batch):
+        batch, chaos_scale = split_chaos_scale(batch)
         l, metrics, grads = grad_fn(state.params, batch)
+        l = apply_chaos_scale(l, chaos_scale)
         return apply_gradients(state, opt_cfg, l, metrics, grads)
 
     return train_step

@@ -19,6 +19,34 @@ class TrainState(NamedTuple):
     opt: OptState
 
 
+# Fault injection (resilience.faults): a chaos run attaches this scalar to
+# the batch dict; the train step multiplies the loss by it BEFORE the
+# non-finite skip check in apply_gradients, so injecting NaN exercises the
+# real grad-skip recovery path end to end.  Multiplying by the normal 1.0
+# is an IEEE identity (bitwise no-op), and when the key is absent —
+# every non-chaos run — the traced program is byte-identical to a build
+# without this hook (tests/test_resilience.py pins both).
+CHAOS_LOSS_SCALE_KEY = "_chaos_loss_scale"
+
+
+def split_chaos_scale(batch: Dict) -> Tuple[Dict, Optional[Any]]:
+    """Pop the fault-injection loss scale off the batch (None when chaos
+    is off — the batch object passes through untouched)."""
+    if CHAOS_LOSS_SCALE_KEY not in batch:
+        return batch, None
+    batch = dict(batch)
+    return batch, batch.pop(CHAOS_LOSS_SCALE_KEY)
+
+
+def apply_chaos_scale(l, scale):
+    """Scale the loss used for the skip decision.  Gradients are left
+    untouched: the only injected values are 1.0 (identity) and NaN (the
+    skip discards the gradients entirely)."""
+    if scale is None:
+        return l
+    return l * jnp.asarray(scale, l.dtype)
+
+
 def init_train_state(key, cfg: ModelConfig, opt_cfg: OptimizerConfig,
                      mesh: Mesh) -> TrainState:
     params = model_lib.init_params(key, cfg, mesh)
@@ -117,7 +145,9 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, mesh: Mesh,
                                      microbatch=microbatch)
 
     def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        batch, chaos_scale = split_chaos_scale(batch)
         l, metrics, grads = accum_grads(state.params, batch)
+        l = apply_chaos_scale(l, chaos_scale)
         return apply_gradients(state, opt_cfg, l, metrics, grads)
 
     return train_step
@@ -146,6 +176,7 @@ def _make_dp_only_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
         return l, metrics, grads
 
     def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        batch, chaos_scale = split_chaos_scale(batch)
         # shard batch over as many axes as divide evenly (trim from the
         # right: 256 rows on a 512-chip multi-pod mesh shards over
         # (pod, data) and replicates over model — pmean stays correct)
@@ -167,6 +198,7 @@ def _make_dp_only_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
         l, metrics, grads = shard_map(
             local_step, mesh=mesh, in_specs=(rep, bspec),
             out_specs=(P(), P(), P()))(state.params, batch)
+        l = apply_chaos_scale(l, chaos_scale)
         return apply_gradients(state, opt_cfg, l, metrics, grads)
 
     return train_step

@@ -98,7 +98,9 @@ def autotune(mesh, comm=None, *, axis_name: str = "model",
         chunk_candidates=tuple(chunk_candidates), warmup=warmup,
         iters=iters, include_kernels=include_kernels, verbose=verbose)
     for r in rows:
-        obs_events.emit("tune_probe", kind=r.kind, name=r.name,
+        # "kind" is the event-kind key itself: the row's kind must travel
+        # under a different name (emit("...", kind=...) is a TypeError)
+        obs_events.emit("tune_probe", row_kind=r.kind, name=r.name,
                         wire_format=r.wire_format,
                         msg_bytes=int(r.msg_bytes), chunks=r.chunks,
                         seconds=float(r.seconds))

@@ -17,12 +17,22 @@ import tempfile
 import time
 from typing import Optional
 
+from repro.obs import events as obs_events
 from repro.tune.fingerprint import Fingerprint
 
 SCHEMA_VERSION = 1
 ENV_CACHE = "REPRO_TUNE_CACHE"
 
 log = logging.getLogger(__name__)
+
+
+def _reject(path: str, reason: str) -> None:
+    """A rejected (corrupt / stale / mismatched) entry is both logged and
+    emitted as a typed ``tune_cache_reject`` event, so a chaos-corrupted
+    cache shows up in events.jsonl instead of only in debug logs
+    (docs/resilience.md)."""
+    log.warning("tune cache: %s; ignoring it", reason)
+    obs_events.emit("tune_cache_reject", path=path, reason=reason)
 
 
 def cache_dir() -> str:
@@ -69,25 +79,22 @@ def load(fp: Fingerprint) -> Optional[dict]:
         with open(path) as f:
             data = json.load(f)
     except (OSError, UnicodeDecodeError, json.JSONDecodeError) as e:
-        log.warning("tune cache: unreadable entry %s (%s); ignoring it",
-                    path, e)
+        _reject(path, f"unreadable entry {path} ({e})")
         return None
     if not isinstance(data, dict) or data.get("schema") != SCHEMA_VERSION:
-        log.warning("tune cache: schema mismatch in %s (have %r, want %r); "
-                    "ignoring it", path,
-                    data.get("schema") if isinstance(data, dict) else None,
-                    SCHEMA_VERSION)
+        have = data.get("schema") if isinstance(data, dict) else None
+        _reject(path, f"schema mismatch in {path} (have {have!r}, "
+                      f"want {SCHEMA_VERSION!r})")
         return None
     try:
         stored = Fingerprint.from_dict(data["fingerprint"])
     except Exception as e:  # malformed fingerprint dict
-        log.warning("tune cache: bad fingerprint in %s (%s); ignoring it",
-                    path, e)
+        _reject(path, f"bad fingerprint in {path} ({e})")
         return None
     if stored != fp:
-        log.warning(
-            "tune cache: fingerprint mismatch in %s (fields: %s); "
-            "rejecting entry — re-run `python -m repro.tune` on this mesh",
-            path, ", ".join(fp.diff(stored)) or "<key collision>")
+        _reject(path, "fingerprint mismatch in %s (fields: %s) — re-run "
+                      "`python -m repro.tune` on this mesh"
+                      % (path, ", ".join(fp.diff(stored))
+                         or "<key collision>"))
         return None
     return data

@@ -1,0 +1,661 @@
+"""repro.resilience: chaos-verified fault tolerance (docs/resilience.md).
+
+In-process units cover the --chaos grammar, once-vs-replayable fault
+semantics, the supervisor's exit classification / rolling budget /
+backoff, the checkpoint integrity layer (digests, quarantine, fallback,
+typed errors for every historical crash mode), the watchdog re-arm and
+straggler clamp fixes, data-stall detection, and tune-cache corruption
+rejection.
+
+The recovery-equivalence harness runs the REAL launcher in subprocesses
+(fresh interpreters with their own XLA_FLAGS, like tests/test_comm.py):
+a run killed mid-step by its own chaos plan and resumed by the
+supervisor must produce a post-resume loss trajectory BITWISE identical
+to an uninterrupted run — under SIGKILL, under hang-then-watchdog +
+SIGTERM preemption, and under checkpoint-corruption faults that force
+restore to fall back a committed step.
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (CheckpointCorruptError,
+                                         CheckpointError, CheckpointManager,
+                                         committed_steps, load_checkpoint,
+                                         save_checkpoint)
+from repro.data.pipeline import DataStallError, PrefetchIterator
+from repro.obs import events as obs_events
+from repro.resilience.faults import (ONCE, STATE_NAME, Fault, FaultPlan)
+from repro.resilience.supervisor import (backoff_seconds, classify_exit,
+                                         supervise)
+from repro.runtime.fault import (EXIT_PREEMPTED, EXIT_WATCHDOG, StepWatchdog,
+                                 StragglerMonitor)
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture
+def events():
+    """MemorySink attached to the global log for the test's duration."""
+    log = obs_events.global_log()
+    mem = obs_events.MemorySink()
+    log.add_sink(mem)
+    yield mem
+    log.remove_sink(mem)
+
+
+# ------------------------------------------------------- chaos grammar --
+
+
+def test_chaos_spec_parse_and_describe():
+    p = FaultPlan.parse("sigkill@5, nan_grads@3, hang@7:2.5, seed=11")
+    assert p.seed == 11
+    assert [f.fault_id for f in p.faults] == ["nan_grads@3", "sigkill@5",
+                                              "hang@7"]
+    assert p.faults[2].seconds() == 2.5
+    # unspecified args take the kind's default (hang: effectively forever)
+    assert Fault("hang", 1).seconds() == 3600.0
+    assert Fault("data_stall", 1).seconds() == 1.0
+    # describe() round-trips through parse()
+    q = FaultPlan.parse(p.describe())
+    assert q.faults == p.faults and q.seed == p.seed
+
+
+@pytest.mark.parametrize("spec", [
+    "bogus@3",            # unknown kind
+    "nan_grads",          # no @STEP
+    "nan_grads@x",        # non-integer step
+    "nan_grads@-1",       # negative step
+    "hang@3:abc",         # non-float arg
+    "hang@3:-1",          # negative arg
+    "hang@3:inf",         # non-finite arg
+    "seed=x",             # bad seed
+    "seed=3",             # seed alone names no faults
+    "",                   # empty spec
+])
+def test_chaos_spec_rejects_bad_entries(spec):
+    with pytest.raises(ValueError):
+        FaultPlan.parse(spec)
+
+
+def test_chaos_once_markers_persist_across_plans(tmp_path, events):
+    """Process-killing faults fire exactly once per run directory: the
+    fired-marker is persisted (atomically, before the kill) so the
+    supervised restart's fresh FaultPlan skips them."""
+    state = str(tmp_path / STATE_NAME)
+    p = FaultPlan.parse("hang@2:0.0")
+    p.bind_state(state)
+    t0 = time.monotonic()
+    p.on_step_start(2)                  # fires (0-second hang), marks
+    assert time.monotonic() - t0 < 5.0
+    assert os.path.exists(state)
+    assert [e.data["fault"] for e in events.of_kind("chaos")] == ["hang"]
+    # a resumed process builds a NEW plan from the same spec + state file
+    q = FaultPlan.parse("hang@2:0.0")
+    q.bind_state(state)
+    q.on_step_start(2)                  # must NOT re-fire
+    assert len(events.of_kind("chaos")) == 1
+    # replayable faults do re-fire: bitwise replay depends on it
+    assert ONCE.isdisjoint({"nan_grads", "data_stall"})
+
+
+def test_chaos_loss_scale_identity_and_injection(events):
+    p = FaultPlan.parse("nan_grads@3")
+    assert p.wants_loss_scale()
+    assert p.loss_scale(2) == np.float32(1.0)     # IEEE-identity scale
+    assert np.isnan(p.loss_scale(3))
+    ev = events.of_kind("chaos")[-1]
+    assert ev.data["fault"] == "nan_grads" and ev.step == 3
+    # the key rides the batch for EVERY step of a nan_grads run (the
+    # scale is a traced input: one compiled program for the whole run)
+    from repro.runtime.step import CHAOS_LOSS_SCALE_KEY
+    b = {"tokens": np.zeros(3)}
+    assert CHAOS_LOSS_SCALE_KEY in p.chaos_batch(b, 1)
+    assert CHAOS_LOSS_SCALE_KEY not in b          # original untouched
+    # ... and never rides it otherwise (same dict object back)
+    q = FaultPlan.parse("sigkill@5")
+    assert q.chaos_batch(b, 1) is b
+
+
+def test_chaos_corruption_is_seed_deterministic(tmp_path):
+    blob = bytes(range(256)) * 8
+    paths = []
+    for i in range(2):
+        f = tmp_path / f"shard{i}"
+        f.write_bytes(blob)
+        paths.append(str(f))
+    d0 = FaultPlan([Fault("ckpt_flip", 1)], seed=7)._corrupt_file(
+        paths[0], truncate=False, salt=1)
+    d1 = FaultPlan([Fault("ckpt_flip", 1)], seed=7)._corrupt_file(
+        paths[1], truncate=False, salt=1)
+    assert d0 == d1                                # same seed+salt: same bit
+    assert (tmp_path / "shard0").read_bytes() == \
+        (tmp_path / "shard1").read_bytes() != blob
+
+
+# --------------------------------------------------------- train-step hook --
+
+
+def test_train_step_hlo_byte_identical_without_chaos(mesh):
+    """With no chaos key in the batch, the compiled train step must be
+    byte-identical to a build that never heard of the chaos hook."""
+    import jax
+    from repro.configs.base import OptimizerConfig
+    from repro.configs.registry import get_smoke_config
+    from repro.runtime.step import (apply_gradients, init_train_state,
+                                    make_accum_grad_fn, make_train_step)
+    cfg = get_smoke_config("smollm-360m")
+    opt = OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    from repro.compat import set_mesh
+    with set_mesh(mesh):
+        state = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh)
+        batch = {"tokens": np.zeros((2, 8), np.int32),
+                 "labels": np.zeros((2, 8), np.int32)}
+        hooked = make_train_step(cfg, opt, mesh, use_lsh=False)
+
+        accum = make_accum_grad_fn(cfg, mesh, use_lsh=False)
+
+        def train_step(st, b):          # the pre-chaos-hook step, verbatim
+            l, metrics, grads = accum(st.params, b)
+            return apply_gradients(st, opt, l, metrics, grads)
+
+        a = jax.jit(hooked).lower(state, batch).as_text()
+        b = jax.jit(train_step).lower(state, batch).as_text()
+    assert a == b
+
+
+def test_train_step_chaos_scale_skips_update(mesh):
+    """A NaN loss scale must route through the grad-skip path: params
+    unchanged, grad_skips incremented; a 1.0 scale is bitwise inert."""
+    import jax
+    from repro.configs.base import OptimizerConfig
+    from repro.configs.registry import get_smoke_config
+    from repro.runtime.step import (CHAOS_LOSS_SCALE_KEY, init_train_state,
+                                    make_train_step)
+    cfg = get_smoke_config("smollm-360m")
+    opt = OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    from repro.compat import set_mesh
+    with set_mesh(mesh):
+        state = init_train_state(jax.random.PRNGKey(0), cfg, opt, mesh)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": rng.integers(0, cfg.vocab_size, (2, 8)
+                                        ).astype(np.int32),
+                 "labels": rng.integers(0, cfg.vocab_size, (2, 8)
+                                        ).astype(np.int32)}
+        step = jax.jit(make_train_step(cfg, opt, mesh, use_lsh=False))
+        plain, m0 = step(state, dict(batch))
+        one = dict(batch, **{CHAOS_LOSS_SCALE_KEY: np.float32(1.0)})
+        scaled, m1 = step(state, one)
+        for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(scaled)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        nan = dict(batch, **{CHAOS_LOSS_SCALE_KEY: np.float32(np.nan)})
+        skipped, m2 = step(state, nan)
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(skipped.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(m2["grad_skips"]) == 1 and int(m1["grad_skips"]) == 0
+        # the logged loss comes from the model aux, not the scaled value
+        assert np.isfinite(float(m2["loss"]))
+
+
+# ------------------------------------------------------------ supervisor --
+
+
+def test_classify_exit_policy():
+    done = classify_exit(0)
+    assert (done.restart, done.budgeted) == (False, False)
+    pre = classify_exit(EXIT_PREEMPTED)
+    assert (pre.name, pre.restart, pre.budgeted) == ("preempted", True, False)
+    wd = classify_exit(EXIT_WATCHDOG)
+    assert (wd.name, wd.restart, wd.budgeted) == ("watchdog", True, True)
+    use = classify_exit(2)
+    assert (use.restart, use.budgeted) == (False, False)
+    sig = classify_exit(-9)
+    assert (sig.name, sig.restart, sig.budgeted) == ("signal_9", True, True)
+    crash = classify_exit(1)
+    assert (crash.name, crash.restart, crash.budgeted) == ("crash", True, True)
+
+
+def test_backoff_grows_and_caps():
+    rng = np.random.default_rng(0)
+    seq = [backoff_seconds(n, 1.0, 60.0, rng) for n in (1, 2, 3, 4)]
+    assert 1.0 <= seq[0] <= 1.25 and 2.0 <= seq[1] <= 2.5
+    assert 4.0 <= seq[2] <= 5.0 and 8.0 <= seq[3] <= 10.0
+    assert backoff_seconds(50, 1.0, 60.0, rng) <= 60.0 * 1.25   # capped
+    assert backoff_seconds(3, 0.0, 60.0, rng) == 0.0            # disabled
+
+
+def test_supervisor_preemptions_never_burn_budget(events):
+    """A preemption-heavy fleet must keep its full crash budget: 10
+    preemptions then one crash then success, under max_restarts=1."""
+    codes = iter([EXIT_PREEMPTED] * 10 + [1, 0])
+    rc = supervise(lambda: next(codes), max_restarts=1, window_s=100.0,
+                   backoff_base_s=0.0, clock=lambda: 0.0, sleep=lambda s: 0)
+    assert rc == 0
+    restarts = events.of_kind("restart")
+    assert len(restarts) == 11
+    assert sum(e.data["budgeted"] for e in restarts) == 1
+    assert all(e.data["backoff_s"] == 0.0
+               for e in restarts if not e.data["budgeted"])
+
+
+def test_supervisor_budget_exhaustion_returns_last_code(events):
+    codes = iter([EXIT_WATCHDOG] * 10)
+    rc = supervise(lambda: next(codes), max_restarts=3, window_s=100.0,
+                   backoff_base_s=0.0, clock=lambda: 0.0, sleep=lambda s: 0)
+    assert rc == EXIT_WATCHDOG
+    assert len(events.of_kind("restart")) == 3
+    ex = events.of_kind("restart_budget_exhausted")
+    assert len(ex) == 1 and ex[0].data["budget"] == 3
+
+
+def test_supervisor_budget_window_rolls(events):
+    """Budgeted restarts older than the window stop counting: crashes
+    spaced wider than window_s restart forever (here: 5 > budget of 2)."""
+    times = iter([0.0, 100.0, 200.0, 300.0, 400.0, 500.0])
+    codes = iter([1, 1, 1, 1, 1, 0])
+    rc = supervise(lambda: next(codes), max_restarts=2, window_s=50.0,
+                   backoff_base_s=0.0, clock=lambda: next(times),
+                   sleep=lambda s: 0)
+    assert rc == 0
+    assert len(events.of_kind("restart")) == 5
+    assert not events.of_kind("restart_budget_exhausted")
+
+
+def test_supervisor_usage_error_never_restarts(events):
+    calls = []
+    rc = supervise(lambda: calls.append(1) or 2, max_restarts=3,
+                   window_s=100.0, backoff_base_s=0.0)
+    assert rc == 2 and len(calls) == 1
+    assert not events.of_kind("restart")
+
+
+def test_supervisor_sleeps_backoff():
+    codes = iter([1, 1, 0])
+    slept = []
+    rc = supervise(lambda: next(codes), max_restarts=5, window_s=100.0,
+                   backoff_base_s=1.0, seed=0, clock=lambda: 0.0,
+                   sleep=slept.append)
+    assert rc == 0 and len(slept) == 2
+    assert 1.0 <= slept[0] <= 1.25 and 2.0 <= slept[1] <= 2.5
+
+
+# ------------------------------------------------- checkpoint integrity --
+
+
+def _tree(scale=1.0):
+    return {"w": np.arange(12, dtype=np.float32).reshape(3, 4) * scale,
+            "b": np.full((4,), scale, np.float32), "none": None}
+
+
+def _shard_path(directory, step):
+    d = os.path.join(directory, f"step_{step}")
+    name = [n for n in os.listdir(d) if n.startswith("shard_")][0]
+    return os.path.join(d, name)
+
+
+def test_manifest_carries_shard_digests(tmp_path):
+    import hashlib
+    save_checkpoint(str(tmp_path), 1, _tree())
+    with open(tmp_path / "step_1" / "manifest.json") as f:
+        manifest = json.load(f)
+    [(name, digest)] = manifest["digests"].items()
+    blob = (tmp_path / "step_1" / name).read_bytes()
+    assert hashlib.sha256(blob).hexdigest() == digest
+
+
+def test_bitflip_quarantined_and_fallback(tmp_path, events):
+    """The acceptance-criteria path: flip one bit in a committed shard;
+    load detects it via the manifest digest, quarantines the step
+    (checkpoint_corrupt event), restores the previous committed step —
+    no crash, no silent garbage."""
+    save_checkpoint(str(tmp_path), 1, _tree(1.0))
+    save_checkpoint(str(tmp_path), 2, _tree(2.0))
+    p = _shard_path(tmp_path, 2)
+    buf = bytearray(open(p, "rb").read())
+    buf[len(buf) // 3] ^= 0x10
+    open(p, "wb").write(bytes(buf))
+    tree, step, _ = load_checkpoint(str(tmp_path), _tree())
+    assert step == 1
+    np.testing.assert_array_equal(tree["w"], _tree(1.0)["w"])
+    assert committed_steps(str(tmp_path)) == [1]
+    assert (tmp_path / "quarantine_step_2").is_dir()    # evidence kept
+    ev = events.of_kind("checkpoint_corrupt")
+    assert len(ev) == 1 and ev[0].step == 2
+    assert "sha256 mismatch" in ev[0].data["reason"]
+
+
+def test_truncated_shard_quarantined_and_fallback(tmp_path, events):
+    save_checkpoint(str(tmp_path), 1, _tree(1.0))
+    save_checkpoint(str(tmp_path), 2, _tree(2.0))
+    p = _shard_path(tmp_path, 2)
+    blob = open(p, "rb").read()
+    open(p, "wb").write(blob[: len(blob) // 2])
+    tree, step, _ = load_checkpoint(str(tmp_path), _tree())
+    assert step == 1
+    assert events.of_kind("checkpoint_corrupt")
+
+
+def test_missing_shard_with_commit_falls_back(tmp_path, events):
+    save_checkpoint(str(tmp_path), 1, _tree(1.0))
+    save_checkpoint(str(tmp_path), 2, _tree(2.0))
+    os.unlink(_shard_path(tmp_path, 2))
+    tree, step, _ = load_checkpoint(str(tmp_path), _tree())
+    assert step == 1
+    assert "missing" in events.of_kind("checkpoint_corrupt")[0].data["reason"]
+
+
+def test_all_corrupt_raises_typed_error(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    p = _shard_path(tmp_path, 1)
+    open(p, "wb").write(b"garbage")
+    with pytest.raises(CheckpointCorruptError, match="every committed"):
+        load_checkpoint(str(tmp_path), _tree())
+
+
+def test_explicit_step_corruption_raises_not_falls_back(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree(1.0))
+    save_checkpoint(str(tmp_path), 2, _tree(2.0))
+    open(_shard_path(tmp_path, 2), "wb").write(b"garbage")
+    with pytest.raises(CheckpointCorruptError):
+        load_checkpoint(str(tmp_path), _tree(), step=2)
+    # the good step is still reachable explicitly
+    _, step, _ = load_checkpoint(str(tmp_path), _tree(), step=1)
+    assert step == 1
+
+
+def test_missing_template_key_is_typed_error(tmp_path):
+    """Historical crash mode: restoring into a template with a leaf the
+    checkpoint never saved died with a raw KeyError."""
+    save_checkpoint(str(tmp_path), 1, _tree())
+    bad = dict(_tree(), extra_leaf=np.zeros(2, np.float32))
+    with pytest.raises(CheckpointError, match="no entry for template leaf"):
+        load_checkpoint(str(tmp_path), bad)
+
+
+def test_template_drift_is_typed_error_not_fallback(tmp_path):
+    """dtype/shape drift means EVERY checkpoint is equally incompatible:
+    falling back would quarantine good data, so it raises instead
+    (historical crash mode: reshape/frombuffer ValueError)."""
+    save_checkpoint(str(tmp_path), 1, _tree())
+    save_checkpoint(str(tmp_path), 2, _tree())
+    drift = dict(_tree(), w=np.zeros((5, 5), np.float32))
+    with pytest.raises(CheckpointError, match="drift"):
+        load_checkpoint(str(tmp_path), drift)
+    assert committed_steps(str(tmp_path)) == [1, 2]     # nothing quarantined
+
+
+def test_quarantined_dirs_are_not_committed_steps(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    os.rename(tmp_path / "step_1", tmp_path / "quarantine_step_1")
+    assert committed_steps(str(tmp_path)) == []
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path), _tree())
+
+
+def test_manager_save_error_surfaces_in_wait(tmp_path, events):
+    """Satellite (a): the async save thread used to swallow exceptions —
+    wait() returned clean and the run believed the step was durable."""
+    mgr = CheckpointManager(str(tmp_path / "nope" / "\0bad"))
+    mgr.save_async(3, _tree())
+    with pytest.raises(CheckpointError, match="step 3 failed"):
+        mgr.wait()
+    assert events.of_kind("checkpoint_error")
+    # the error is raised once, not latched forever
+    mgr.directory = str(tmp_path)
+    mgr.save_async(4, _tree())
+    mgr.wait()
+    assert committed_steps(str(tmp_path)) == [4]
+
+
+def test_manager_save_error_surfaces_in_next_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "nope" / "\0bad"))
+    mgr.save_async(3, _tree())
+    time.sleep(0.1)
+    with pytest.raises(CheckpointError):
+        mgr.save_async(4, _tree())
+
+
+# ------------------------------------------- watchdog / straggler fixes --
+
+
+def test_watchdog_survives_nonexiting_callback_and_rearms():
+    """Satellite (b): the monitor thread used to run on_timeout once and
+    fall out of its loop — a second hang was never detected."""
+    fired = []
+    wd = StepWatchdog(0.2, on_timeout=lambda: fired.append(1))
+    wd.arm()
+    time.sleep(0.9)
+    assert len(fired) == 1          # one shot per arm, not a firing loop
+    wd.arm()
+    time.sleep(0.9)
+    assert len(fired) == 2          # the thread survived and re-armed
+    wd.stop()
+
+
+def test_straggler_clamps_outlier_and_skips_warmup():
+    """Satellite (c): a 50x hang folded into the EMA used to inflate the
+    baseline enough to mask the next hang; the compile-dominated first
+    step used to seed the EMA."""
+    mon = StragglerMonitor(threshold=2.0, ema=0.9, warmup=1)
+    assert not mon.record(0, 100.0)     # compile step: ignored entirely
+    assert mon.ema is None
+    for s in range(1, 11):
+        assert not mon.record(s, 1.0)
+    assert mon.record(11, 50.0)         # flagged ...
+    assert mon.ema <= 2.0 * 1.0 + 1e-6  # ... and clamped, not folded in
+    assert mon.record(12, 50.0)         # so the NEXT hang is still caught
+    assert mon.flagged == [11, 12]
+
+
+# ------------------------------------------------------------ data stall --
+
+
+def test_prefetch_stall_emits_events_then_raises(events):
+    import threading
+    release = threading.Event()
+
+    def slow():
+        release.wait(10.0)
+        yield 1
+
+    it = PrefetchIterator(slow(), stall_timeout_s=0.1, stall_max_s=0.35)
+    with pytest.raises(DataStallError):
+        next(it)
+    release.set()
+    stalls = events.of_kind("data_stall")
+    assert len(stalls) >= 3
+    assert stalls[0].data["timeout_s"] == 0.1
+
+
+def test_prefetch_stall_recovers_when_slow_not_dead(events):
+    def slow():
+        time.sleep(0.3)
+        yield 42
+
+    it = PrefetchIterator(slow(), stall_timeout_s=0.1, stall_max_s=30.0)
+    assert next(it) == 42               # stall events, but no raise
+    assert events.of_kind("data_stall")
+    with pytest.raises(StopIteration):
+        next(it)
+
+
+# ------------------------------------------------------------ tune cache --
+
+
+def test_tune_cache_corruption_rejected_with_event(tmp_path, monkeypatch,
+                                                   events):
+    from repro.comm.topology import Topology
+    from repro.tune import cache as tune_cache
+    from repro.tune.fingerprint import fingerprint_for
+    monkeypatch.setenv(tune_cache.ENV_CACHE, str(tmp_path))
+    topo = Topology(axis_sizes=(("data", 2), ("model", 8)), node_size=4)
+    fp = fingerprint_for(None, topo, "model")
+    tune_cache.store(fp, {"rows": []})
+    assert tune_cache.load(fp) is not None
+    # the chaos payload: what FaultPlan's tune_corrupt writes
+    plan = FaultPlan.parse("tune_corrupt@0")
+    plan.on_step_end(0, tune_cache_dir=str(tmp_path))
+    assert tune_cache.load(fp) is None          # miss, not crash
+    rej = events.of_kind("tune_cache_reject")
+    assert len(rej) == 1 and "unreadable" in rej[0].data["reason"]
+    chaos = events.of_kind("chaos")
+    assert chaos and chaos[0].data["fault"] == "tune_corrupt"
+
+
+# ----------------------------------------- recovery equivalence (e2e) ----
+
+
+def _launch(argv, env_extra=None, devices=1, timeout=900):
+    env = dict(os.environ, PYTHONPATH=_SRC,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    env.update(env_extra or {})
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", *argv],
+        capture_output=True, text=True, env=env, timeout=timeout)
+
+
+def _step_losses(metrics_dir):
+    """step -> loss from events.jsonl; later entries win, so a killed
+    run's replayed steps report their post-resume values."""
+    out = {}
+    with open(os.path.join(metrics_dir, "events.jsonl")) as f:
+        for line in f:
+            rec = json.loads(line)
+            if rec.get("kind") == "step":
+                out[rec["step"]] = rec["loss"]
+    return out
+
+
+def _events_of(metrics_dir, kind):
+    with open(os.path.join(metrics_dir, "events.jsonl")) as f:
+        return [json.loads(line) for line in f
+                if json.loads(line).get("kind") == kind]
+
+
+_COMMON = ["--arch", "smollm-360m", "--smoke", "--steps", "6",
+           "--batch", "4", "--seq", "32", "--log-every", "1"]
+
+
+@pytest.fixture(scope="module")
+def baseline(tmp_path_factory):
+    """One uninterrupted reference run; every chaos run below must match
+    its loss trajectory bitwise (json round-trips float64 exactly, so
+    string equality of the decoded floats IS bit equality)."""
+    d = tmp_path_factory.mktemp("baseline")
+    r = _launch([*_COMMON, "--ckpt", str(d / "ckpt"), "--ckpt-every", "2",
+                 "--metrics-dir", str(d)])
+    assert r.returncode == 0, r.stderr[-3000:]
+    losses = _step_losses(str(d))
+    assert sorted(losses) == list(range(6))
+    return losses
+
+
+def test_sigkill_resume_bitwise_identical(tmp_path, baseline):
+    """THE acceptance criterion: SIGKILL mid-run + --auto-restart; the
+    post-resume trajectory must be bitwise identical to uninterrupted."""
+    d = tmp_path / "run"
+    r = _launch([*_COMMON, "--ckpt", str(d / "ckpt"), "--ckpt-every", "2",
+                 "--metrics-dir", str(d), "--chaos", "sigkill@3",
+                 "--auto-restart"],
+                env_extra={"RESTART_BACKOFF_S": "0", "MAX_RESTARTS": "3"})
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert _step_losses(str(d)) == baseline
+    [restart] = _events_of(str(d), "restart")
+    assert restart["classification"] == "signal_9" and restart["budgeted"]
+    # the fault fired exactly once: the resumed run replayed step 3 clean
+    injected = _events_of(str(d), "chaos")
+    assert [e["fault"] for e in injected] == ["sigkill"]
+
+
+def test_hang_watchdog_and_sigterm_preempt_resume(tmp_path, baseline):
+    """hang -> watchdog exit 43 (budgeted restart); later sigterm ->
+    checkpoint -> exit 42 (free restart); final trajectory bitwise."""
+    d = tmp_path / "run"
+    r = _launch([*_COMMON, "--ckpt", str(d / "ckpt"), "--ckpt-every", "2",
+                 "--metrics-dir", str(d), "--watchdog-s", "10",
+                 "--chaos", "hang@2:120,sigterm@4", "--auto-restart"],
+                env_extra={"RESTART_BACKOFF_S": "0", "MAX_RESTARTS": "3"},
+                timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert _step_losses(str(d)) == baseline
+    restarts = _events_of(str(d), "restart")
+    kinds = [(e["classification"], e["budgeted"]) for e in restarts]
+    assert ("watchdog", True) in kinds
+    assert ("preempted", False) in kinds
+    assert any(e["kind"] == "watchdog"
+               for e in map(json.loads,
+                            open(os.path.join(d, "events.jsonl"))))
+
+
+def test_ckpt_corruption_faults_resume_bitwise(tmp_path, baseline):
+    """ckpt_flip + ckpt_truncate damage two committed checkpoints; the
+    sigkill that follows forces restore, which must quarantine both and
+    fall back to the last clean step — then replay bitwise."""
+    d = tmp_path / "run"
+    r = _launch([*_COMMON, "--ckpt", str(d / "ckpt"), "--ckpt-every", "1",
+                 "--metrics-dir", str(d),
+                 "--chaos", "ckpt_flip@1,ckpt_truncate@2,sigkill@3",
+                 "--auto-restart"],
+                env_extra={"RESTART_BACKOFF_S": "0", "MAX_RESTARTS": "3"})
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert _step_losses(str(d)) == baseline
+    corrupt = _events_of(str(d), "checkpoint_corrupt")
+    assert len(corrupt) == 2
+    assert any("sha256" in e["reason"] for e in corrupt)
+    quarantined = [n for n in os.listdir(d / "ckpt")
+                   if n.startswith("quarantine_step_")]
+    assert len(quarantined) == 2
+    faults = [e["fault"] for e in _events_of(str(d), "chaos")]
+    assert sorted(faults) == ["ckpt_flip", "ckpt_truncate", "sigkill"]
+
+
+def test_nan_grads_and_data_stall_in_run(tmp_path):
+    """Replayable faults: nan_grads exercises the grad-skip path (params
+    keep training afterwards), data_stall just delays — neither kills or
+    restarts the run."""
+    d = tmp_path / "run"
+    r = _launch([*_COMMON, "--metrics-dir", str(d),
+                 "--chaos", "nan_grads@2,data_stall@4:0.2"])
+    assert r.returncode == 0, r.stderr[-3000:]
+    steps = {e["step"]: e for e in _events_of(str(d), "step")}
+    assert steps[1]["skips"] == 0 and steps[2]["skips"] == 1
+    assert steps[5]["skips"] == 1               # exactly one skip, then on
+    assert all(np.isfinite(e["loss"]) for e in steps.values())
+    faults = [e["fault"] for e in _events_of(str(d), "chaos")]
+    assert sorted(faults) == ["data_stall", "nan_grads"]
+
+
+def test_sigkill_resume_bitwise_multidevice(tmp_path):
+    """Kill-and-resume on a real 8-device (2 data x 4 model) MoE mesh —
+    the CI chaos step's subprocess run: restore re-shards onto the fresh
+    mesh and the trajectory still matches the uninterrupted run bitwise."""
+    args = ["--arch", "granite-moe-3b-a800m", "--smoke", "--steps", "4",
+            "--batch", "8", "--seq", "32", "--log-every", "1",
+            "--mesh-data", "2", "--mesh-model", "4", "--ckpt-every", "2"]
+    base = tmp_path / "base"
+    r = _launch([*args, "--ckpt", str(base / "ckpt"),
+                 "--metrics-dir", str(base)], devices=8)
+    assert r.returncode == 0, r.stderr[-3000:]
+    chaos = tmp_path / "chaos"
+    r = _launch([*args, "--ckpt", str(chaos / "ckpt"),
+                 "--metrics-dir", str(chaos), "--chaos", "sigkill@2",
+                 "--auto-restart"], devices=8,
+                env_extra={"RESTART_BACKOFF_S": "0", "MAX_RESTARTS": "3"})
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert _step_losses(str(chaos)) == _step_losses(str(base))
+    [restart] = _events_of(str(chaos), "restart")
+    assert restart["classification"] == "signal_9"
+
+
+def test_bad_chaos_spec_is_usage_error_no_restart(tmp_path):
+    r = _launch([*_COMMON, "--metrics-dir", str(tmp_path / "m"),
+                 "--chaos", "not_a_fault@3", "--auto-restart"],
+                env_extra={"RESTART_BACKOFF_S": "0"})
+    assert r.returncode == 2            # usage error: supervisor gives up
+    assert "unknown fault kind" in r.stdout + r.stderr
