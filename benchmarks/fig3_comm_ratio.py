@@ -19,6 +19,7 @@ import json
 import os
 
 from benchmarks.common import a2a_share_from_ratio, paper_comm_ratio
+from repro import hw
 
 # Paper Table 1 (hidden size h, activated experts k)
 PAPER_MODELS = {
@@ -28,7 +29,7 @@ PAPER_MODELS = {
     "gpt-moe-52b": {"h": 1024, "k": 2},
     "swin-moe-l": {"h": 1536, "k": 2},
 }
-V5E = {"flops": 197e12, "b_inter": 50e9}
+V5E = {"flops": hw.DEVICE_FLOPS, "b_inter": hw.ICI_BYTES_PER_S}
 
 
 def run(out_rows):

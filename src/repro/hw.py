@@ -1,0 +1,20 @@
+"""Device datasheet constants — the ONE home for peak-throughput numbers.
+
+Every analytic model in the repo prices compute and wire time against the
+same TPU v5e-class part (the system-prompt hardware): fig3's Eq. 6 rows,
+the dry-run roofline (launch/hlo_analysis.py), the live per-phase
+attribution (obs/timeline.py) and the bench harness
+(benchmarks/bench.py).  These used to be copy-pasted per consumer, which
+let them drift; import them from here instead.
+
+The *measured* counterparts live elsewhere by design: link constants are
+probe-calibrated per mesh by ``repro.tune`` (``CalibratedCostModel``)
+and per-phase seconds come from ``obs/profile.py``'s trace parsing —
+the constants below are the uncalibrated fallback, never the answer.
+"""
+from __future__ import annotations
+
+# TPU v5e, per chip.
+DEVICE_FLOPS = 197e12           # bf16 peak FLOP/s
+HBM_BYTES_PER_S = 819e9         # HBM bandwidth, B/s
+ICI_BYTES_PER_S = 50e9          # inter-chip link, B/s (fig3's b_inter)

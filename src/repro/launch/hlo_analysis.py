@@ -15,10 +15,11 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-# TPU v5e-class hardware constants (system prompt).
-PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
-HBM_BW = 819e9               # B/s per chip
-ICI_BW = 50e9                # B/s per link (we charge 1 link-equivalent)
+# TPU v5e-class hardware constants — the shared datasheet (repro.hw),
+# aliased to the names this module has always exported.
+from repro.hw import DEVICE_FLOPS as PEAK_FLOPS
+from repro.hw import HBM_BYTES_PER_S as HBM_BW
+from repro.hw import ICI_BYTES_PER_S as ICI_BW
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

@@ -25,7 +25,7 @@ def _percentile(sorted_vals, q: float) -> float:
     return sorted_vals[i]
 
 
-def main() -> int:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
@@ -35,7 +35,15 @@ def main() -> int:
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--metrics-dir", default="",
                     help="also write structured events (events.jsonl) here")
-    args = ap.parse_args()
+    ap.add_argument("--bench-json", default="",
+                    help="append a schema'd serve bench row (p50/p99 "
+                         "latency, tokens/sec/device) to "
+                         "BENCH_<name>.json in this directory "
+                         "(obs/benchrow.py; the CI regression gate's "
+                         "input)")
+    ap.add_argument("--bench-name", default="serve_smoke",
+                    help="trajectory name for --bench-json")
+    args = ap.parse_args(argv)
 
     import jax
     import jax.numpy as jnp
@@ -97,12 +105,29 @@ def main() -> int:
                 done += n
             dt = max(1e-9, time.time() - t0)
         latencies.sort()
+        p50 = _percentile(latencies, 50)
+        p99 = _percentile(latencies, 99)
         obs_events.emit(
             "serve_summary", requests=args.requests, tokens=tokens_out,
             dt=dt, tokens_per_s=tokens_out / dt,
             tokens_per_s_device=tokens_out / dt / n_dev,
-            latency_p50_s=_percentile(latencies, 50),
-            latency_p99_s=_percentile(latencies, 99))
+            latency_p50_s=p50, latency_p99_s=p99)
+        if args.bench_json:
+            from repro.obs import benchrow
+            row = benchrow.bench_row(
+                name=args.bench_name, kind="serve",
+                metrics={"latency_p50_s": p50, "latency_p99_s": p99,
+                         "tokens_per_s": tokens_out / dt,
+                         "tokens_per_s_device": tokens_out / dt / n_dev,
+                         "requests": float(args.requests),
+                         "tokens": float(tokens_out)},
+                context={"arch": args.arch, "smoke": args.smoke,
+                         "gen": args.gen, "prompt_len": args.prompt_len,
+                         "batch_slots": args.batch_slots,
+                         "devices": n_dev})
+            path = benchrow.append_row(args.bench_json, row)
+            obs_events.emit("bench_row", name=args.bench_name,
+                            row_kind="serve", path=path)
         return 0
     finally:
         if jsonl is not None:

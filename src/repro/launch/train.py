@@ -41,7 +41,16 @@ phase tracing (``ObsConfig``), appends every event to
 ``DIR/events.jsonl``, and writes ``DIR/trace.json`` (Chrome trace-event
 JSON, loadable in Perfetto) plus ``DIR/metrics.json`` (live comm-ratio
 summary) at exit.  ``--profile N`` captures a ``jax.profiler`` device
-trace of the first N steps into ``DIR/jax_trace``.
+trace of the first N steps into ``DIR/jax_trace``, parses it into the
+MEASURED per-phase timeline (``obs/profile.py``) and reconciles it
+against the modeled attribution — ``model_drift`` events plus
+``measured_*`` / ``model_*`` keys in metrics.json, with comm-phase
+drift recorded into the tune cache as a stale-calibration signal
+(``obs/reconcile.py``).  The rolling anomaly detectors
+(``obs/anomaly.py``) watch step time / loss / comm share / load
+imbalance / stragglers whenever ``--metrics-dir`` is on;
+``--anomaly-exit`` escalates persistent degradation to exit 43 for the
+supervisor.
 """
 from __future__ import annotations
 
@@ -142,9 +151,22 @@ def main() -> int:
                          "metrics.json here and enable the in-graph "
                          "metrics / phase tracing (docs/observability.md)")
     ap.add_argument("--profile", type=int, default=0,
-                    help="capture a jax.profiler trace of the first N "
-                         "steps into <metrics-dir>/jax_trace")
+                    help="capture a jax.profiler trace of N steady-state "
+                         "steps (the compile step is skipped) into "
+                         "<metrics-dir>/jax_trace, parse it "
+                         "into the MEASURED per-phase timeline and "
+                         "reconcile it against the modeled one "
+                         "(docs/observability.md; requires --metrics-dir)")
+    ap.add_argument("--anomaly-exit", action="store_true",
+                    help="exit EXIT_WATCHDOG (43) when the anomaly "
+                         "detectors see persistent degradation, handing "
+                         "the restart decision to --auto-restart's "
+                         "budgeted supervisor (docs/resilience.md)")
     args = ap.parse_args()
+    if args.profile and not args.metrics_dir:
+        ap.error("--profile requires --metrics-dir: the device trace and "
+                 "its measured-timeline artifacts land under "
+                 "<metrics-dir> (jax_trace/, metrics.json)")
     if args.auto_restart:
         return supervise(sys.argv[1:])
 
@@ -158,8 +180,9 @@ def main() -> int:
     from repro.obs import export as obs_export
     from repro.obs import timeline as timeline_lib
     from repro.data.synthetic import SyntheticLMDataset
-    from repro.runtime.fault import (ExpertRebalancer, PreemptionHandler,
-                                     StepWatchdog, StragglerMonitor)
+    from repro.runtime.fault import (EXIT_WATCHDOG, ExpertRebalancer,
+                                     PreemptionHandler, StepWatchdog,
+                                     StragglerMonitor)
     from repro.runtime.step import (TrainState, init_train_state,
                                     make_train_step)
 
@@ -231,6 +254,15 @@ def main() -> int:
     straggler = StragglerMonitor(threshold=args.straggler_factor)
     timeline = timeline_lib.StepTimeline()
     mgr = CheckpointManager(args.ckpt, keep=3) if args.ckpt else None
+    monitor = None
+    escalator = None
+    if args.metrics_dir:
+        from repro.obs import anomaly as anomaly_lib
+        monitor = anomaly_lib.AnomalyMonitor()
+        if args.anomaly_exit:
+            from repro.resilience.supervisor import AnomalyEscalator
+            escalator = AnomalyEscalator()
+            monitor.add_consumer(escalator.consume)
     rebalancer = None
     placement = None
     if cfg.has_moe():
@@ -247,9 +279,56 @@ def main() -> int:
         stage_msg_bytes = (args.batch // max(1, n_mb)) * args.seq \
             * cfg.d_model * jax.numpy.dtype(cfg.dtype).itemsize
 
+    step_hlo_text = None
+    modeled_phase_s = None
+    steps_profiled = 0
+    profile_extra = {}
+    profile_analyzed = False
+
+    def analyze_profile():
+        """Parse the captured device trace into the MEASURED timeline,
+        reconcile it against the modeled phase split, emit model_drift
+        events and (when a calibration is in play) record the stale
+        signal into the tune cache.  Results land in ``profile_extra``
+        for metrics.json."""
+        nonlocal profile_analyzed
+        if profiling or profile_analyzed or not steps_profiled:
+            return
+        profile_analyzed = True
+        from repro.obs import profile as obs_profile
+        from repro.obs import reconcile as obs_reconcile
+        try:
+            measured = obs_profile.parse_jax_trace(
+                os.path.join(args.metrics_dir, "jax_trace"),
+                hlo_text=step_hlo_text, steps=steps_profiled,
+                n_devices=n_mesh)
+        except Exception as exc:
+            obs_events.emit("error", where="profile", message=str(exc))
+            return
+        profile_extra.update(measured.summary())
+        if not modeled_phase_s:
+            return
+        report = obs_reconcile.reconcile(modeled_phase_s,
+                                         measured.phase_seconds)
+        obs_reconcile.emit_drift_events(report)
+        profile_extra.update(report.to_metrics())
+        if cfg.has_moe() \
+                and tune_runtime.tuning_mode(comm_cfg) != "off":
+            try:
+                entry = obs_reconcile.record_stale_calibration(
+                    mesh, comm_cfg, report)
+                if entry is not None and report.stale:
+                    obs_events.emit("tune_stale", path=entry,
+                                    comm_drift=report.comm_drift,
+                                    drift_score=report.drift_score)
+            except Exception as exc:
+                obs_events.emit("error", where="reconcile",
+                                message=str(exc))
+
     def export_artifacts(final_metrics=None):
         if not args.metrics_dir:
             return
+        analyze_profile()
         sched = None
         if args.mesh_pipe > 1:
             from repro.runtime.pipeline_schedule import build_1f1b
@@ -261,12 +340,25 @@ def main() -> int:
         if final_metrics is not None:
             extra = {k: float(v) for k, v in final_metrics.items()
                      if np.ndim(v) == 0}
+        extra.update(profile_extra)
+        if monitor is not None:
+            for det, n in monitor.counts().items():
+                extra[f"anomaly_{det}"] = float(n)
         obs_export.write_metrics_json(
             os.path.join(args.metrics_dir, obs_export.METRICS_NAME),
             timeline, extra=extra)
 
+    # The capture starts at the first STEADY-STATE step, not at process
+    # start: tracing through init + the compile-dominated first step
+    # floods the capture with host events (the CPU backend drops the
+    # later device events we actually want) and would measure
+    # compilation, not the step.
     profiling = False
-    if args.profile and args.metrics_dir:
+    profile_done = False
+    profile_requested = bool(args.profile and args.metrics_dir)
+
+    def start_profile():
+        nonlocal profiling
         try:
             jax.profiler.start_trace(
                 os.path.join(args.metrics_dir, "jax_trace"))
@@ -275,13 +367,14 @@ def main() -> int:
             obs_events.emit("error", where="profiler", message=str(exc))
 
     def stop_profile():
-        nonlocal profiling
+        nonlocal profiling, profile_done
         if profiling:
             try:
                 jax.profiler.stop_trace()
             except Exception as exc:
                 obs_events.emit("error", where="profiler", message=str(exc))
             profiling = False
+        profile_done = True
 
     metrics = {}
     loss = float("nan")
@@ -296,7 +389,21 @@ def main() -> int:
             step_fn = jax.jit(make_train_step(cfg, opt, mesh,
                                               use_lsh=use_lsh,
                                               microbatch=0))
+            if profile_requested:
+                # The compiled text's op_name metadata is what lets the
+                # trace parser resolve CPU/GPU fusion names back to the
+                # obs/ phase scopes (obs/profile.hlo_phase_map).
+                try:
+                    step_hlo_text = step_fn.lower(
+                        state, ds.batch_at(start)).compile().as_text()
+                except Exception as exc:
+                    obs_events.emit("error", where="profiler",
+                                    message=f"step HLO capture: {exc}")
             for s in range(start, args.steps):
+                if profile_requested and not profiling and not profile_done \
+                        and (s == start + 1
+                             or args.steps - start == 1):
+                    start_profile()
                 batch = ds.batch_at(s)
                 watchdog.arm()
                 if chaos is not None:
@@ -314,20 +421,40 @@ def main() -> int:
                     # the phase attribution weights from it (calibrated
                     # topology costs + analytic FLOPs).
                     try:
-                        timeline.set_phase_seconds(
-                            timeline_lib.model_phase_seconds(
-                                cfg, mesh, batch=args.batch, seq=args.seq,
-                                stage_msg_bytes=stage_msg_bytes))
+                        modeled_phase_s = timeline_lib.model_phase_seconds(
+                            cfg, mesh, batch=args.batch, seq=args.seq,
+                            stage_msg_bytes=stage_msg_bytes)
+                        timeline.set_phase_seconds(modeled_phase_s)
                     except Exception as exc:
                         obs_events.emit("error", where="timeline",
                                         message=str(exc))
-                if profiling and s - start + 1 >= args.profile:
-                    stop_profile()
-                if straggler.record(s, dt):
+                if profiling:
+                    steps_profiled += 1
+                    if steps_profiled >= args.profile:
+                        stop_profile()
+                is_straggler = straggler.record(s, dt)
+                if is_straggler:
                     obs_events.emit("straggler", step=s, dt=dt,
                                     ema=straggler.ema,
                                     factor=args.straggler_factor,
                                     phases=rec.phase_seconds())
+                if monitor is not None:
+                    signals = {"step_time": dt, "loss": loss,
+                               "comm_share": timeline.comm_share(),
+                               "straggler": 1.0 if is_straggler else 0.0}
+                    if "obs_load_imbalance" in metrics:
+                        signals["load_imbalance"] = float(
+                            metrics["obs_load_imbalance"])
+                    monitor.observe(s, signals)
+                    if escalator is not None and escalator.should_exit:
+                        # persistent degradation: make the run durable and
+                        # hand the restart decision to the supervisor
+                        if mgr:
+                            mgr.save_async(s + 1, state)
+                            mgr.wait()
+                        stop_profile()
+                        export_artifacts(metrics)
+                        return EXIT_WATCHDOG
                 if rebalancer is not None:
                     rebalancer.record(np.asarray(metrics["expert_load"]),
                                       placement)

@@ -12,13 +12,25 @@ until ``configs.base.ObsConfig.enabled`` turns them on:
     reconstruction.
   * ``obs.events`` / ``obs.export`` — typed events with console/JSONL
     sinks and a Chrome trace-event (Perfetto) exporter.
+  * ``obs.profile`` — MEASURED per-phase timing parsed from the
+    ``jax.profiler`` device trace a ``--profile`` run captures;
+    ``obs.reconcile`` — modeled-vs-measured drift (``model_drift``
+    events + the tune-cache stale-calibration signal);
+    ``obs.anomaly`` — rolling-window detectors over step metrics
+    (``anomaly`` events, consumable by the resilience supervisor).
+  * ``obs.benchrow`` — the schema'd ``BENCH_*.json`` trajectory rows
+    ``benchmarks/bench.py`` and ``launch/serve.py`` write and the CI
+    regression gate compares.
 
-Launch surface: ``--metrics-dir`` / ``--profile`` on launch/train.py and
+Launch surface: ``--metrics-dir`` / ``--profile`` / ``--anomaly-exit``
+on launch/train.py; ``--metrics-dir`` / ``--bench-json`` on
 launch/serve.py.
 """
-from repro.obs import events, metrics, tracing
+from repro.obs import (anomaly, benchrow, events, metrics, profile,
+                       reconcile, tracing)
 from repro.obs.events import EventLog, emit, global_log
 from repro.obs.metrics import MOE_SCHEMA, MetricBag
 
-__all__ = ["events", "metrics", "tracing", "EventLog", "emit",
-           "global_log", "MOE_SCHEMA", "MetricBag"]
+__all__ = ["anomaly", "benchrow", "events", "metrics", "profile",
+           "reconcile", "tracing", "EventLog", "emit", "global_log",
+           "MOE_SCHEMA", "MetricBag"]

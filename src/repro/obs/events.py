@@ -153,6 +153,22 @@ def _fmt_chaos(e: Event) -> str:
     return s + (f" ({detail})" if detail else "")
 
 
+def _fmt_model_drift(e: Event) -> str:
+    d = e.data
+    if d.get("phase") == "*":
+        return (f"[drift] modeled vs measured: score "
+                f"{d.get('drift_score', 0.0):.2f}, comm drift "
+                f"{d.get('comm_drift', 0.0):.2f} "
+                f"(share {d.get('comm_share_modeled', 0.0):.2f} modeled / "
+                f"{d.get('comm_share_measured', 0.0):.2f} measured), "
+                f"clock x{d.get('clock_ratio', 0.0):.2g}"
+                + (", STALE calibration" if d.get("stale") else ""))
+    return (f"[drift] phase {d.get('phase')}: share "
+            f"{d.get('modeled_share', 0.0):.2f} modeled vs "
+            f"{d.get('measured_share', 0.0):.2f} measured "
+            f"(err {d.get('share_err', 0.0):.0%})")
+
+
 _RENDERERS: Dict[str, Callable[[Event], str]] = {
     "straggler": _fmt_straggler,
     "comm_plan": _fmt_comm_plan,
@@ -193,6 +209,22 @@ _RENDERERS: Dict[str, Callable[[Event], str]] = {
         f"{e.data.get('error', '')}"),
     "tune_cache_reject": lambda e: (
         f"[tune] cache reject: {e.data.get('reason', '')}"),
+    "model_drift": _fmt_model_drift,
+    "anomaly": lambda e: (
+        f"[anomaly] {e.data.get('detector')} at step {e.step}: "
+        f"{e.data.get('message', '')}"),
+    "tune_stale": lambda e: (
+        f"[tune] calibration STALE "
+        f"(comm drift {e.data.get('comm_drift', 0.0):.0%}) — re-run the "
+        f"probe ({e.data.get('path', e.data.get('fingerprint', ''))})"),
+    "anomaly_escalation": lambda e: (
+        f"[anomaly] ESCALATED: {int(e.data.get('count', 0))} "
+        f"{e.data.get('detector')} anomalies within "
+        f"{e.data.get('window_s', 0.0):.0f}s — exiting "
+        f"{e.data.get('exit_code')} for the supervisor"),
+    "bench_row": lambda e: (
+        f"[bench] {e.data.get('row_kind')} row "
+        f"{e.data.get('name')!r} -> {e.data.get('path', '')}"),
     "restart": lambda e: (
         f"[supervisor] restart #{int(e.data.get('attempt', 0))}: child "
         f"exit {e.data.get('exit_code')} "

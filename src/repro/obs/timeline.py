@@ -39,9 +39,9 @@ PHASE_ORDER = ("gate", "hash_compress", "dispatch_a2a", "expert_mlp",
                "combine_a2a", "decompress", "stage_transfer", "other")
 COMM_PHASES = ("dispatch_a2a", "combine_a2a", "stage_transfer")
 
-# Default device throughput for the analytic compute model — TPU v5e
-# peak, the same constant benchmarks/common.py's Eq. 6 rows use.
-DEVICE_FLOPS = 197e12
+# Default device throughput for the analytic compute model — the shared
+# v5e datasheet constant (repro.hw), re-exported for existing callers.
+from repro.hw import DEVICE_FLOPS
 
 
 @dataclass(frozen=True)

@@ -42,6 +42,53 @@ ENV_WINDOW_S = "RESTART_WINDOW_S"
 ENV_BACKOFF_S = "RESTART_BACKOFF_S"
 
 
+class AnomalyEscalator:
+    """Bridge from soft anomaly detection (``obs.anomaly``) to the hard
+    restart machinery above.  Registered as an ``AnomalyMonitor``
+    consumer, it counts anomalies from the escalating detectors inside a
+    rolling window; at ``limit`` it fires ``anomaly_escalation`` (once)
+    and flips ``should_exit`` — the train loop then checkpoints and
+    exits ``EXIT_WATCHDOG``, which ``classify_exit`` treats as a
+    budgeted, restartable degradation.  One loss spike or one slow step
+    never escalates; a *persistent* pattern does."""
+
+    ESCALATING = ("step_time_regression", "persistent_straggler")
+
+    def __init__(self, *, limit: int = 3, window_s: float = 600.0,
+                 detectors=ESCALATING, on_escalate=None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.limit = int(limit)
+        self.window_s = float(window_s)
+        self.detectors = tuple(detectors)
+        self.on_escalate = on_escalate
+        self._clock = clock
+        self._marks: list = []
+        self.escalated = False
+
+    @property
+    def should_exit(self) -> bool:
+        return self.escalated
+
+    def consume(self, anomaly) -> bool:
+        """The AnomalyMonitor consumer hook; returns ``should_exit``."""
+        if anomaly.detector not in self.detectors:
+            return self.escalated
+        now = self._clock()
+        self._marks = [t for t in self._marks
+                       if now - t < self.window_s]
+        self._marks.append(now)
+        if not self.escalated and len(self._marks) >= self.limit:
+            self.escalated = True
+            obs_events.emit(
+                "anomaly_escalation", step=anomaly.step,
+                detector=anomaly.detector, count=len(self._marks),
+                limit=self.limit, window_s=self.window_s,
+                exit_code=EXIT_WATCHDOG)
+            if self.on_escalate is not None:
+                self.on_escalate(anomaly)
+        return self.escalated
+
+
 @dataclass(frozen=True)
 class ExitClass:
     """What a child exit code means for the restart policy."""

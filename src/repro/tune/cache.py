@@ -44,15 +44,9 @@ def entry_path(fp: Fingerprint) -> str:
     return os.path.join(cache_dir(), f"{fp.key()}.json")
 
 
-def store(fp: Fingerprint, payload: dict) -> str:
-    """Atomically write the entry for ``fp``; returns the path.  The
-    fingerprint is embedded so a renamed/copied file still self-identifies
-    (load() re-checks it against the requesting mesh)."""
-    d = cache_dir()
+def _atomic_write(path: str, entry: dict) -> None:
+    d = os.path.dirname(path)
     os.makedirs(d, exist_ok=True)
-    path = entry_path(fp)
-    entry = {"schema": SCHEMA_VERSION, "created_unix": time.time(),
-             "fingerprint": fp.to_dict(), **payload}
     fd, tmp = tempfile.mkstemp(dir=d, prefix=".tmp-", suffix=".json")
     try:
         with os.fdopen(fd, "w") as f:
@@ -64,7 +58,37 @@ def store(fp: Fingerprint, payload: dict) -> str:
         except OSError:
             pass
         raise
+
+
+def store(fp: Fingerprint, payload: dict) -> str:
+    """Atomically write the entry for ``fp``; returns the path.  The
+    fingerprint is embedded so a renamed/copied file still self-identifies
+    (load() re-checks it against the requesting mesh)."""
+    path = entry_path(fp)
+    entry = {"schema": SCHEMA_VERSION, "created_unix": time.time(),
+             "fingerprint": fp.to_dict(), **payload}
+    _atomic_write(path, entry)
     log.info("tune cache: stored %s", path)
+    return path
+
+
+def record_drift(fp: Fingerprint, drift: dict) -> Optional[str]:
+    """Annotate ``fp``'s entry with a modeled-vs-measured drift record
+    (``obs/reconcile.DriftReport.to_payload()``) — the stale-calibration
+    signal: ``runtime`` surfaces ``drift.reprobe_recommended`` entries as
+    ``tune_stale`` and ``ensure_calibrated`` re-probes them when probing
+    is allowed (docs/tuning.md).  Returns the entry path, or None when no
+    valid entry exists (nothing calibrated means nothing to go stale)."""
+    entry = load(fp)
+    if entry is None:
+        return None
+    entry["drift"] = {"recorded_unix": time.time(), **dict(drift)}
+    path = entry_path(fp)
+    _atomic_write(path, entry)
+    log.info("tune cache: recorded drift for %s (comm_drift=%.3f, "
+             "reprobe_recommended=%s)", path,
+             float(drift.get("comm_drift", 0.0)),
+             bool(drift.get("reprobe_recommended", False)))
     return path
 
 

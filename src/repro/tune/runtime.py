@@ -27,6 +27,7 @@ import os
 from typing import Dict, Optional, Tuple
 
 from repro.comm.topology import Topology, build_topology
+from repro.obs import events as obs_events
 from repro.tune import cache
 from repro.tune.fingerprint import Fingerprint, fingerprint_for
 from repro.tune.model import CalibratedCostModel
@@ -36,7 +37,8 @@ MODES = ("off", "cache", "probe")
 
 log = logging.getLogger(__name__)
 
-_MEMO: Dict[Tuple[str, int, int], Optional[CalibratedCostModel]] = {}
+_Memo = Tuple[Optional[CalibratedCostModel], bool]   # (model, stale)
+_MEMO: Dict[Tuple[str, int, int], _Memo] = {}
 
 
 def tuning_mode(comm=None) -> str:
@@ -51,7 +53,12 @@ def tuning_mode(comm=None) -> str:
     return name
 
 
-def _load(fp: Fingerprint) -> Optional[CalibratedCostModel]:
+def _load_entry(fp: Fingerprint) -> _Memo:
+    """(model, stale) for ``fp``.  An entry whose reconciliation drift
+    record recommends a re-probe (``obs/reconcile`` wrote it via
+    ``cache.record_drift``) is still USABLE — stale means mis-calibrated,
+    not corrupt — but it announces itself with a ``tune_stale`` event,
+    once per file version (the memo key includes mtime)."""
     path = cache.entry_path(fp)
     try:
         st = os.stat(path)
@@ -62,16 +69,32 @@ def _load(fp: Fingerprint) -> Optional[CalibratedCostModel]:
         return _MEMO[memo_key]
     entry = cache.load(fp)
     model = None
+    stale = False
     if entry is not None:
         try:
             model = CalibratedCostModel.from_payload(fp.key(), entry)
         except Exception as e:  # malformed rows/constants: miss, not crash
             log.warning("tune cache: unparseable payload in %s (%s); "
                         "ignoring it", path, e)
+        drift = entry.get("drift")
+        if model is not None and isinstance(drift, dict) \
+                and drift.get("reprobe_recommended"):
+            stale = True
+            log.warning("tune cache: calibration %s is drift-stale "
+                        "(comm_drift=%.3f) — re-run the probe", path,
+                        float(drift.get("comm_drift", 0.0)))
+            obs_events.emit(
+                "tune_stale", fingerprint=fp.key(), path=path,
+                comm_drift=float(drift.get("comm_drift", 0.0)),
+                drift_score=float(drift.get("drift_score", 0.0)))
     if len(_MEMO) > 64:                  # bounded; entries are tiny
         _MEMO.clear()
-    _MEMO[memo_key] = model
-    return model
+    _MEMO[memo_key] = (model, stale)
+    return model, stale
+
+
+def _load(fp: Fingerprint) -> Optional[CalibratedCostModel]:
+    return _load_entry(fp)[0]
 
 
 def calibration_for(mesh, topo: Topology, comm=None,
@@ -97,14 +120,18 @@ def ensure_calibrated(mesh, comm=None, axis_name: str = "model", *,
     node = int(getattr(comm, "node_size", 0) or 0)
     topo = build_topology(mesh, axis_name=axis_name, node_size=node)
     fp = fingerprint_for(mesh, topo, axis_name)
-    model = _load(fp)
-    if model is not None:
-        return model
-    if not probe and mode != "probe":
+    model, stale = _load_entry(fp)
+    can_probe = probe or mode == "probe"
+    if model is not None and not (stale and can_probe):
+        return model                   # valid, or stale w/o probe rights
+    if not can_probe:
         log.info("tune: cache miss for %s and mode=%r — staying on static "
                  "constants (run `python -m repro.tune` to calibrate)",
                  fp.key(), mode)
         return None
+    if stale:
+        log.info("tune: re-probing drift-stale calibration for %s",
+                 fp.key())
     from repro.tune.autotune import autotune
     autotune(mesh, comm, axis_name=axis_name, **autotune_kwargs)
     return _load(fp)
